@@ -1,0 +1,58 @@
+"""Shared benchmark utilities: timing, the paper's dataset suite
+(Table IV), CSV emission."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Tuple
+
+import numpy as np
+import jax
+
+# Paper Table IV: (records M, features N) per benchmark dataset.  No
+# network access in this container, so measured runs use synthetic
+# stand-ins with the same shapes (spectra controlled where it matters --
+# fig8 uses structured covariances).
+DATASETS: Dict[str, Tuple[int, int]] = {
+    "mnist-8x8": (1797, 64),
+    "mnist-28x28": (70000, 784),
+    "cifar-10": (60000, 3072),
+    "olivetti": (400, 4096),
+    "breast-cancer": (45312, 7),
+    "20-newsgroups": (18846, 1024),
+}
+
+# paper headline GPU comparison numbers (A6000; Sec. VII-B/C) for reference
+PAPER_CLAIMS = {
+    "cifar10_total_speedup_vs_a6000": 3.87,
+    "svd_speedup_vs_a6000": 22.75,
+    "cifar10_energy_reduction_vs_a6000": 42.14,
+}
+
+
+def synthetic_dataset(m: int, n: int, seed: int = 0,
+                      spectrum: str = "decay") -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    k = min(n, 32)
+    if spectrum == "decay":
+        base = rng.standard_normal((m, k)) * np.geomspace(1, 0.05, k)
+        mix = rng.standard_normal((k, n)) / np.sqrt(k)
+        x = base @ mix + 0.05 * rng.standard_normal((m, n))
+    else:
+        x = rng.standard_normal((m, n))
+    return x.astype(np.float32)
+
+
+def time_call(fn: Callable, *args, reps: int = 3, warmup: int = 1) -> float:
+    """Median wall-time of a jitted call in microseconds."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times) * 1e6)
+
+
+def emit(name: str, us_per_call, derived=""):
+    print(f"{name},{us_per_call},{derived}", flush=True)

@@ -1,0 +1,59 @@
+"""Paper Sec. VIII design-space exploration (Figs. 9-11): execution time,
+power and resources vs tile size T and parallelism index S.
+
+Validates the paper's scaling laws on the cycle-approximate model:
+exec time ~ 1/T^2 at fixed S (Fig. 9a), ~ 1/S at fixed T (Fig. 9b);
+power and resources grow with S*T^2 (Figs. 10-11; DSP = S*T^2/2 exactly
+matches Tables I/II).  A measured column sweeps the Pallas mm_engine block
+size on CPU (interpret mode) as the kernel-level T analogue."""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.memory_model import FabricConfig, pca_seconds, power_w, resources
+from .common import emit, synthetic_dataset, time_call
+
+_M, _N = 20000, 512  # representative workload for the sweeps
+
+
+def run(fast: bool = True):
+    # Fig 9a: T sweep at fixed S=4
+    base = None
+    for t in (4, 8, 12, 16, 20):
+        cfg = FabricConfig(T=t, S=4)
+        total = pca_seconds(_M, _N, cfg)["total_s"]
+        base = base or total * t * t
+        emit(f"fig9a/T{t}_S4", round(total * 1e6, 1),
+             f"t2_scaled={total * t * t / base:.3f}")
+    # Fig 9b: S sweep at fixed T=4
+    base = None
+    for s in (8, 12, 16, 20, 24):
+        cfg = FabricConfig(T=4, S=s)
+        total = pca_seconds(_M, _N, cfg)["total_s"]
+        base = base or total * s
+        emit(f"fig9b/T4_S{s}", round(total * 1e6, 1),
+             f"s_scaled={total * s / base:.3f}")
+    # Fig 10: power model
+    for t in (4, 8, 12, 16, 20):
+        emit(f"fig10a/power_T{t}_S4", "",
+             f"watts={power_w(FabricConfig(T=t, S=4)):.3f}")
+    for s in (8, 16, 24):
+        emit(f"fig10b/power_T4_S{s}", "",
+             f"watts={power_w(FabricConfig(T=4, S=s)):.3f}")
+    # Fig 11: resources (DSP exact: S*T^2/2)
+    for t, s in ((4, 8), (16, 32)):
+        r = resources(FabricConfig(T=t, S=s))
+        emit(f"fig11/resources_T{t}_S{s}", "",
+             f"LUT={r['LUT']:.0f};FF={r['FF']:.0f};"
+             f"BRAM={r['BRAM']:.1f};DSP={r['DSP']:.0f}")
+
+    # measured kernel-level analogue: mm_engine block-size sweep
+    from repro.kernels import ops
+    x = jnp.asarray(synthetic_dataset(1024, 256, 7))
+    for blk in ((64, 128) if fast else (32, 64, 128, 256)):
+        us = time_call(lambda a: ops.mm_engine_matmul(a.T, a, block=blk), x,
+                       reps=2)
+        emit(f"dse/mm_engine_block{blk}", round(us, 1), "interpret_mode")

@@ -1,0 +1,17 @@
+"""Paper Fig. 7: energy (peak power x end-to-end latency) per dataset for
+both published fabric configurations.  Pure analytical model (power fitted
+exactly through the two published design points)."""
+from __future__ import annotations
+
+from repro.core.memory_model import ARTIX7, VIRTEX_US, pca_seconds, power_w
+from .common import DATASETS, PAPER_CLAIMS, emit
+
+
+def run(fast: bool = True):
+    for name, (m, n) in DATASETS.items():
+        for tag, cfg in (("artix7_4_8", ARTIX7), ("virtex_16_32", VIRTEX_US)):
+            est = pca_seconds(m, n, cfg)
+            emit(f"fig7/{name}/{tag}", round(est["total_s"] * 1e6, 1),
+                 f"energy_j={est['energy_j']:.5f};power_w={power_w(cfg):.3f}")
+    emit("fig7/paper_claim_cifar10_energy_reduction", "",
+         PAPER_CLAIMS["cifar10_energy_reduction_vs_a6000"])

@@ -1,0 +1,38 @@
+"""Paper Fig. 8 + Sec. VII-D: relative off-diagonal Frobenius norm vs sweep
+count across data modalities -- the offline study that justifies the fixed
+50-sweep schedule.  Validates the paper's claims: standard datasets hit the
+numerical noise floor within 10-15 sweeps; ill-conditioned (clustered
+eigenvalue) data needs more, motivating the 50-sweep factor of safety."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.schedule import (convergence_curve, make_ill_conditioned,
+                                 sweeps_to_tolerance)
+from .common import emit, synthetic_dataset
+
+
+def run(fast: bool = True):
+    suites = {
+        # shape-matched stand-ins for the paper's modalities
+        "mnist-like_1797x64": synthetic_dataset(1797, 64, 1),
+        "faces-like_400x128": synthetic_dataset(400, 128, 2),
+        "biomed-like_4000x7": synthetic_dataset(4000, 7, 3),
+        "text-like_2000x96": synthetic_dataset(2000, 96, 4,
+                                               spectrum="flat"),
+        "ill-conditioned_512x64": make_ill_conditioned(512, 64,
+                                                       cluster_gap=1e-5),
+    }
+    floors = []
+    for name, x in suites.items():
+        curve = convergence_curve(x, sweeps=25 if fast else 50)
+        k6 = sweeps_to_tolerance(curve, 1e-6)
+        floors.append((name, k6))
+        emit(f"fig8/{name}", "",
+             f"sweeps_to_1e-6={k6};final={curve[-1]:.2e}")
+    standard = [k for n, k in floors if not n.startswith("ill")]
+    emit("fig8/claim_10_to_15_sweeps", "",
+         f"max_standard={max(standard)};within_15={max(standard) <= 15}")
+    ill = [k for n, k in floors if n.startswith("ill")]
+    emit("fig8/claim_50_sweep_safety_margin", "",
+         f"ill_conditioned={ill[0]};margin_ok={ill[0] <= 50}")

@@ -1,0 +1,45 @@
+"""EXPERIMENTS §Perf evidence: emits the hillclimb variant records
+(experiments/perf/*.json) next to their baselines as CSV rows."""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from .common import emit
+
+PERF_DIR = pathlib.Path(__file__).resolve().parent.parent / "experiments" / "perf"
+DRY_DIR = pathlib.Path(__file__).resolve().parent.parent / "experiments" / "dryrun"
+
+
+def run(fast: bool = True):
+    if not PERF_DIR.exists():
+        emit("perf/missing", "", "run the §Perf experiments first")
+        return
+    for p in sorted(PERF_DIR.glob("*.json")):
+        r = json.loads(p.read_text())
+        if "roofline" in r:
+            rf = r["roofline"]
+            tag = p.stem.split("__")[-1]
+            emit(f"perf/{r['arch']}/{r['shape']}/{tag}", "",
+                 f"compute_s={rf['compute_s']:.3f};"
+                 f"memory_s={rf['memory_s']:.3f};"
+                 f"collective_s={rf['collective_s']:.3f};"
+                 f"useful={r.get('useful_flops_ratio') or 0:.3f}")
+        elif "baseline" in r and "compressed" in r:
+            emit(f"perf/pod_compression/{r['arch']}_L{r['layers']}_r{r['rank']}",
+                 "",
+                 f"baseline_bytes={r['baseline']['total_bytes']:.3e};"
+                 f"compressed_bytes={r['compressed']['total_bytes']:.3e};"
+                 f"reduction={r['reduction_factor_total']:.2f}x")
+    # baselines of the hillclimbed cells for side-by-side reading
+    for arch, shape in (("falcon-mamba-7b", "train_4k"),
+                        ("arctic-480b", "train_4k"),
+                        ("llama4-maverick-400b-a17b", "train_4k")):
+        f = DRY_DIR / f"{arch}__{shape}__sp__float32.json"
+        if f.exists():
+            r = json.loads(f.read_text())
+            rf = r["roofline"]
+            emit(f"perf/{arch}/{shape}/baseline", "",
+                 f"compute_s={rf['compute_s']:.3f};"
+                 f"memory_s={rf['memory_s']:.3f};"
+                 f"collective_s={rf['collective_s']:.3f}")

@@ -1,0 +1,42 @@
+"""EXPERIMENTS Sec. Roofline source: reads the dry-run records and emits
+the three-term roofline per (arch x shape) on the single-pod mesh, plus
+the dominant bottleneck and MODEL_FLOPS/HLO_FLOPS utility ratio."""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from .common import emit
+
+DRYRUN_DIR = pathlib.Path(__file__).resolve().parent.parent / "experiments" / "dryrun"
+
+
+def records(mesh="16x16"):
+    out = []
+    for p in sorted(DRYRUN_DIR.glob("*.json")):
+        r = json.loads(p.read_text())
+        if r.get("mesh") == mesh:
+            out.append(r)
+    return out
+
+
+def run(fast: bool = True):
+    recs = records()
+    if not recs:
+        emit("roofline/missing", "", "run repro.launch.dryrun --all first")
+        return
+    for r in recs:
+        cell = f"{r['arch']}/{r['shape']}"
+        if "skipped" in r:
+            emit(f"roofline/{cell}", "", "skipped=" + r["skipped"][:40])
+            continue
+        rf = r["roofline"]
+        emit(f"roofline/{cell}", "",
+             f"compute_s={rf['compute_s']:.4f};memory_s={rf['memory_s']:.4f};"
+             f"collective_s={rf['collective_s']:.4f};dom={r['dominant']};"
+             f"useful={r.get('useful_flops_ratio') or 0:.3f}")
+    n_ok = sum("roofline" in r for r in recs)
+    emit("roofline/cells_compiled", "", f"{n_ok}/{len(recs)}")
+    mp = records("2x16x16")
+    emit("roofline/multipod_cells_compiled", "",
+         f"{sum('skipped' not in r for r in mp)}/{len(mp)}")

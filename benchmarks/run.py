@@ -1,0 +1,54 @@
+"""Benchmark harness: one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV.
+
+  fig1  -- PCA bottleneck split (paper Fig. 1)
+  fig6  -- execution time across datasets (paper Fig. 6)
+  fig7  -- energy model (paper Fig. 7)
+  fig8  -- Frobenius-norm convergence study (paper Fig. 8 / Sec. VII-D)
+  dse   -- T/S design-space exploration (paper Figs. 9-11)
+  table3-- resource/config comparison (paper Tables I-III)
+  roofline -- (arch x shape) roofline terms from the dry-run records
+"""
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of benchmarks")
+    ap.add_argument("--full", action="store_true",
+                    help="larger sweeps (slow on CPU)")
+    args = ap.parse_args()
+
+    from . import (dse, fig1_bottlenecks, fig6_exec_time, fig7_energy,
+                   fig8_frobenius, perf_variants, roofline, table3_configs)
+    suite = {
+        "table3": table3_configs,
+        "fig8": fig8_frobenius,
+        "fig7": fig7_energy,
+        "fig6": fig6_exec_time,
+        "fig1": fig1_bottlenecks,
+        "dse": dse,
+        "roofline": roofline,
+        "perf": perf_variants,
+    }
+    only = set(args.only.split(",")) if args.only else None
+    print("name,us_per_call,derived")
+    failed = []
+    for name, mod in suite.items():
+        if only and name not in only:
+            continue
+        try:
+            mod.run(fast=not args.full)
+        except Exception:  # keep the harness running, report at the end
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"FAILED,{','.join(failed)},", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""Scenario: PCA gradient compression (the paper's Jacobi engine as a
+distributed-optimization trick) — train the same model with exact and
+rank-4-compressed gradients and compare loss curves + exchanged bytes.
+
+    PYTHONPATH=src python examples/grad_compression.py
+"""
+import numpy as np
+
+from repro.launch import train
+
+base = ["--arch", "olmo-1b", "--reduced", "--steps", "30",
+        "--global-batch", "8", "--seq-len", "64", "--lr", "1e-2",
+        "--log-every", "10"]
+print("== exact gradients ==")
+exact = train.main(base)
+print("== PCA rank-4 compressed gradients (error feedback) ==")
+comp = train.main(base + ["--compress-grads", "4"])
+
+print(f"\nfinal loss: exact={exact[-1]:.4f}  compressed={comp[-1]:.4f}")
+assert comp[-1] < exact[0] - 0.5, "compressed run failed to learn"
+print("compressed run converges (see EXPERIMENTS §Perf cell 3 for the "
+      "measured 76x pod-link byte reduction)")

@@ -1,0 +1,57 @@
+"""Scenario: long-context KV-cache PCA compression (beyond-paper).
+
+Builds a prompt KV cache with a reduced model, fits per-head eigenbases
+with the MANOJAVAM Jacobi engine, and reports the attention-output error
+at several compression ranks plus the telemetry-suggested rank.
+
+    PYTHONPATH=src python examples/kv_cache_compression.py
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import reduced_config
+from repro.models import kv_compression as kvc
+from repro.models import transformer as tfm
+from repro.parallel.sharding import REPLICATED
+
+cfg = reduced_config("granite-8b", head_dim=32, n_layers=2)
+params = tfm.param_values(tfm.init_model(jax.random.PRNGKey(0), cfg))
+rng = np.random.default_rng(0)
+tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 96)), jnp.int32)
+_, state = tfm.prefill(params, {"tokens": tokens}, cfg, REPLICATED)
+
+# layer-0 cache of the first group (group-stacked leading dim)
+cache = state.caches["l0"]
+k = cache.k[0]
+v = cache.v[0]
+q = jnp.asarray(rng.standard_normal(
+    (2, cfg.n_kv_heads, cfg.group_size, cfg.head_dim)), jnp.float32)
+scale = cfg.head_dim ** -0.5
+
+print(f"cache: {k.shape} (head_dim={cfg.head_dim})")
+for rank in (4, 8, 16, 32):
+    err, ratio = kvc.attention_error(
+        q, k, v, kvc.KVCompressionConfig(rank=rank), scale)
+    print(f"  rank {rank:2d}: memory x{ratio:.2f}, "
+          f"attention-output rel err {float(err):.4f}")
+r = kvc.suggest_rank(k, coverage=0.99)
+print(f"telemetry-suggested rank for 99% spectral coverage: {r}")
+
+# Random-init weights give a near-full-rank cache (suggested rank ~ hd) --
+# an honest negative control.  Trained long-context caches concentrate
+# spectrum; emulate that structure to show the regime the feature targets:
+print("\nstructured (low-rank) cache -- the long-context regime:")
+basis = jnp.asarray(rng.standard_normal((cfg.n_kv_heads, cfg.head_dim, 6)),
+                    jnp.float32)
+coef_k = jnp.asarray(rng.standard_normal((2, 96, cfg.n_kv_heads, 6)),
+                     jnp.float32)
+coef_v = jnp.asarray(rng.standard_normal((2, 96, cfg.n_kv_heads, 6)),
+                     jnp.float32)
+k_lr = jnp.einsum("bskr,kdr->bskd", coef_k, basis)
+v_lr = jnp.einsum("bskr,kdr->bskd", coef_v, basis)
+for rank in (4, 8, 16):
+    err, ratio = kvc.attention_error(
+        q, k_lr, v_lr, kvc.KVCompressionConfig(rank=rank), scale)
+    print(f"  rank {rank:2d}: memory x{ratio:.2f}, rel err {float(err):.5f}")
+print(f"suggested rank: {kvc.suggest_rank(k_lr, coverage=0.99)}")

@@ -1,0 +1,11 @@
+"""Scenario: batched serving — prefill + KV-cache decode loop
+(reduced granite-8b on CPU).
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+from repro.launch import serve
+
+gen = serve.main(["--arch", "granite-8b", "--reduced", "--batch", "4",
+                  "--prompt-len", "32", "--gen-len", "16",
+                  "--temperature", "0.8"])
+print("generated token matrix:\n", gen)

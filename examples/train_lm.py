@@ -1,0 +1,20 @@
+"""Scenario: end-to-end LM training (reduced olmo-1b on CPU) with
+checkpointing and simulated preemption + elastic resume.
+
+    PYTHONPATH=src python examples/train_lm.py
+"""
+import tempfile
+
+from repro.launch import train
+
+with tempfile.TemporaryDirectory() as d:
+    ck = f"{d}/ckpt"
+    args = ["--arch", "olmo-1b", "--reduced", "--steps", "40",
+            "--global-batch", "8", "--seq-len", "64", "--lr", "1e-2",
+            "--ckpt-dir", ck, "--log-every", "10"]
+    print("== run until simulated preemption at step 20 ==")
+    train.main(args + ["--preempt-at", "20"])
+    print("== elastic resume from the checkpoint ==")
+    losses = train.main(args)
+    assert losses[-1] < 5.0
+    print("resumed and finished; final loss", round(losses[-1], 3))

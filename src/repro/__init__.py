@@ -1,0 +1,21 @@
+"""repro — MANOJAVAM on TPU.
+
+A multi-pod JAX framework built around the paper's unified
+matmul + Jacobi-SVD engine:
+
+  repro.core       the PCA accelerator (covariance / Jacobi / CORDIC / DLE)
+  repro.kernels    Pallas TPU kernels (+ jit wrappers and jnp oracles)
+  repro.models     dense / MoE / SSM / hybrid / enc-dec / VLM stack
+  repro.configs    the ten assigned architectures and shape cells
+  repro.parallel   logical-axis sharding rules (DP/FSDP/TP/EP/SP)
+  repro.optim      AdamW, PCA gradient compression, spectral telemetry
+  repro.data       deterministic checkpointable token pipeline
+  repro.checkpoint atomic versioned checkpoints with reshard-on-load
+  repro.runtime    watchdog + elastic restart
+  repro.launch     mesh / dryrun / train / serve / pod_compression
+
+See README.md for entry points, DESIGN.md for the FPGA->TPU mapping, and
+EXPERIMENTS.md for the dry-run, roofline and perf-iteration results.
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,2 @@
+from . import checkpointer
+from .checkpointer import all_steps, latest_step, restore, save

@@ -1,0 +1,67 @@
+"""Assigned input-shape cells and their lowering kinds.
+
+  train_4k     seq 4096,    global_batch 256  -> train_step
+  prefill_32k  seq 32768,   global_batch 32   -> prefill
+  decode_32k   seq 32768,   global_batch 128  -> serve_step (1 new token,
+                                                 KV cache of seq_len)
+  long_500k    seq 524288,  global_batch 1    -> serve_step; SSM/hybrid only
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524288, 1, "decode"),
+}
+
+
+def applicable(cfg: ModelConfig, shape: ShapeCell) -> Optional[str]:
+    """None if the (arch, shape) cell runs; else the skip reason
+    (recorded in EXPERIMENTS.md, see DESIGN.md Arch-applicability)."""
+    if shape.name == "long_500k" and cfg.family not in ("ssm", "hybrid"):
+        return ("full-attention arch: 500k dense-attention KV working set is "
+                "the quadratic regime this cell excludes (DESIGN.md)")
+    return None
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeCell):
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+    No device allocation; weak-type-correct and shardable."""
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    dt = cfg.jdtype()
+    if shape.kind in ("train", "prefill"):
+        specs = {}
+        s_text = s
+        if cfg.family == "vlm":
+            s_text = s - cfg.n_patches
+            specs["patches"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_patches, cfg.d_model), dt)
+        if cfg.family == "encdec":
+            specs["frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_frames, cfg.d_model), dt)
+        specs["tokens"] = jax.ShapeDtypeStruct((b, s_text), i32)
+        return specs
+    # decode: one token + the decode state (KV cache of seq_len)
+    from repro.models import transformer as tfm
+    state = jax.eval_shape(
+        lambda: tfm.make_decode_state(cfg, b, s, dtype=dt))
+    return {"token": jax.ShapeDtypeStruct((b,), i32), "state": state}

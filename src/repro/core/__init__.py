@@ -1,0 +1,26 @@
+"""MANOJAVAM core: unified matmul + Jacobi-SVD engine for PCA."""
+from .covariance import (blocked_covariance, covariance,
+                         distributed_covariance, standardize)
+from .cordic import (ANGLE_MODES, cordic_atan2, cordic_sincos,
+                     rotation_params, rotation_params_cordic,
+                     rotation_params_rutishauser)
+from .dle import Pivot, find_pivot, find_pivot_tilewise
+from .jacobi import (DEFAULT_SWEEPS, EighResult, jacobi_eigh, jacobi_svd,
+                     offdiag_frobenius, relative_offdiag, round_robin_rounds)
+from .pca import (PAPER_CONFIG_ARTIX7, PAPER_CONFIG_VUS, PCAConfig, PCAResult,
+                  evcr_cvcr, fit, fit_distributed, fit_transform, select_k,
+                  transform)
+from .schedule import PAPER_SCHEDULE, SweepSchedule, convergence_curve
+from . import memory_model
+
+__all__ = [
+    "ANGLE_MODES", "DEFAULT_SWEEPS", "EighResult", "PAPER_CONFIG_ARTIX7",
+    "PAPER_CONFIG_VUS", "PAPER_SCHEDULE", "PCAConfig", "PCAResult", "Pivot",
+    "SweepSchedule", "blocked_covariance", "convergence_curve", "cordic_atan2",
+    "cordic_sincos", "covariance", "distributed_covariance", "evcr_cvcr",
+    "find_pivot", "find_pivot_tilewise", "fit", "fit_distributed",
+    "fit_transform", "jacobi_eigh", "jacobi_svd", "memory_model",
+    "offdiag_frobenius", "relative_offdiag", "rotation_params",
+    "rotation_params_cordic", "rotation_params_rutishauser",
+    "round_robin_rounds", "select_k", "standardize", "transform",
+]

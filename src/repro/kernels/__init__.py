@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+  mm_engine       -- block-streaming tiled matmul (the paper's MM-Engine)
+  dle             -- single-scan max-|off-diagonal| pivot search (DLE)
+  cordic          -- fixed-point rotation-parameter pipeline
+  flash_attention -- online-softmax blockwise attention (framework hot spot)
+  mamba_scan      -- chunked selective-scan for SSM architectures
+
+Import ``repro.kernels.ops`` for the jit'd padded wrappers and
+``repro.kernels.ref`` for the pure-jnp oracles.
+"""
+from . import ops, ref  # noqa: F401

@@ -1,0 +1,100 @@
+"""Pipelined CORDIC Pallas kernel (paper Sec. VI-C).
+
+Computes theta = -1/2*atan2(2*c_pq, c_pp - c_qq), sin(theta), cos(theta) for
+a *batch* of pivots in Q2.29 fixed point -- the vectorised analogue of the
+paper's pipelined CORDIC arctangent unit, 1-bit right shifter, and parallel
+sin/cos rotators.  On TPU the VPU executes each shift-add micro-rotation
+across all lanes at once; the pipeline depth of the RTL becomes the
+fori_loop trip count.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.cordic import CORDIC_ITERS, _ATAN_FIXED, _GAIN, _FRAC_BITS
+
+_ONE_F = float(1 << _FRAC_BITS)
+
+
+def _cordic_kernel(apq_ref, app_ref, aqq_ref, th_ref, c_ref, s_ref, *,
+                   iters: int):
+    y = 2.0 * apq_ref[...]
+    x = app_ref[...] - aqq_ref[...]
+
+    # front-end barrel shift: shared power-of-two normalisation into Q2.29
+    mag = jnp.maximum(jnp.maximum(jnp.abs(y), jnp.abs(x)), 1e-30)
+    scale = jnp.exp2(-jnp.ceil(jnp.log2(mag)))
+    yn = y * scale
+    xn = x * scale
+    neg_x = xn < 0
+    xi = jnp.round(jnp.where(neg_x, -xn, xn) * _ONE_F).astype(jnp.int32)
+    yi = jnp.round(jnp.where(neg_x, -yn, yn) * _ONE_F).astype(jnp.int32)
+    zi = jnp.zeros_like(xi)
+
+    # unrolled pipeline stages (as in the RTL); the atan table entries are
+    # per-stage scalar constants, not a captured array
+    for i in range(iters):
+        d = jnp.where(yi >= 0, 1, -1).astype(jnp.int32)
+        xi, yi, zi = (xi + d * (yi >> i), yi - d * (xi >> i),
+                      zi + d * jnp.int32(int(_ATAN_FIXED[i])))
+    ang = zi.astype(jnp.float32) / _ONE_F
+    pi = jnp.float32(np.pi)
+    ang = jnp.where(neg_x, jnp.where(y >= 0, ang + pi, ang - pi), ang)
+
+    # the 1-bit right shift (sign-corrected, see core/cordic.py)
+    theta = -0.5 * ang
+
+    # rotation mode: parallel sin/cos lanes
+    zr = jnp.round(theta * _ONE_F).astype(jnp.int32)
+    xr = jnp.full(zr.shape, np.int32(round(_ONE_F / _GAIN)), jnp.int32)
+    yr = jnp.zeros_like(xr)
+
+    for i in range(iters):
+        d = jnp.where(zr >= 0, 1, -1).astype(jnp.int32)
+        xr, yr, zr = (xr - d * (yr >> i), yr + d * (xr >> i),
+                      zr - d * jnp.int32(int(_ATAN_FIXED[i])))
+    th_ref[...] = theta
+    c_ref[...] = xr.astype(jnp.float32) / _ONE_F
+    s_ref[...] = yr.astype(jnp.float32) / _ONE_F
+
+
+def cordic_rotation_params(
+    apq: jax.Array,
+    app: jax.Array,
+    aqq: jax.Array,
+    *,
+    block: int = 256,
+    iters: int = CORDIC_ITERS,
+    interpret: bool = False,
+):
+    """(theta, cos, sin) for each pivot; 1-D inputs of any common length."""
+    (k,) = apq.shape
+    pad = (-k) % block
+    if pad:
+        apq = jnp.pad(apq, (0, pad))
+        app = jnp.pad(app, (0, pad), constant_values=1.0)
+        aqq = jnp.pad(aqq, (0, pad))
+    n = apq.shape[0]
+    grid = (n // block,)
+    spec = pl.BlockSpec((block,), lambda i: (i,))
+    th, c, s = pl.pallas_call(
+        functools.partial(_cordic_kernel, iters=iters),
+        grid=grid,
+        in_specs=[spec, spec, spec],
+        out_specs=[spec, spec, spec],
+        out_shape=[jax.ShapeDtypeStruct((n,), jnp.float32)] * 3,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel",),
+        ),
+        interpret=interpret,
+        name="cordic",
+    )(apq.astype(jnp.float32), app.astype(jnp.float32),
+      aqq.astype(jnp.float32))
+    return th[:k], c[:k], s[:k]

@@ -1,0 +1,113 @@
+"""Flash attention (forward) Pallas kernel.
+
+The framework-side perf-critical kernel: online-softmax blockwise attention
+with the KV stream as the innermost (sequential) grid dimension and the
+output block stationary in VMEM -- the same output-stationary block-streaming
+dataflow as the MM-Engine, applied to attention.  Used for long prefill where
+materialising (S x S) scores is impossible.
+
+Layout: q (BH, Sq, D), k/v (BH, Skv, D); the ops.py wrapper folds batch and
+heads and repeats KV heads for GQA.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  n_kv: int, block_q: int, block_k: int, causal: bool,
+                  scale: float, q_offset: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)
+    k = k_ref[0].astype(jnp.float32)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale  # (bq, bk)
+
+    if causal:
+        rows = (jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+                + qi * block_q + q_offset)
+        cols = (jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+                + ki * block_k)
+        s = jnp.where(rows >= cols, s, _NEG_INF)
+
+    m_prev = m_ref[:, 0]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = alpha * l_ref[:, 0] + jnp.sum(p, axis=1)
+    m_ref[...] = jnp.broadcast_to(m_new[:, None], m_ref.shape)
+    l_ref[...] = jnp.broadcast_to(l_new[:, None], l_ref.shape)
+    v = v_ref[0].astype(jnp.float32)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+
+    @pl.when(ki == n_kv - 1)
+    def _emit():
+        denom = jnp.maximum(l_ref[:, 0], 1e-30)
+        o_ref[0] = (acc_ref[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    q_offset: int = 0,
+    interpret: bool = False,
+) -> jax.Array:
+    """q (BH, Sq, D), k/v (BH, Skv, D) -> (BH, Sq, D).
+
+    ``q_offset``: absolute position of q[0] (for decode/chunked prefill
+    against a longer KV prefix).  Sequence lengths must be multiples of the
+    block sizes (ops.py pads).
+    """
+    bh, sq, d = q.shape
+    _, skv, _ = k.shape
+    scale = scale if scale is not None else d ** -0.5
+    assert sq % block_q == 0 and skv % block_k == 0, (sq, skv)
+    n_kv = skv // block_k
+
+    grid = (bh, sq // block_q, n_kv)
+    return pl.pallas_call(
+        functools.partial(
+            _flash_kernel, n_kv=n_kv, block_q=block_q, block_k=block_k,
+            causal=causal, scale=scale, q_offset=q_offset),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 128), jnp.float32),
+            pltpu.VMEM((block_q, 128), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+        name="flash_attention",
+    )(q, k, v)

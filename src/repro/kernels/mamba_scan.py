@@ -1,0 +1,86 @@
+"""Selective-scan (Mamba-1 SSM) Pallas kernel.
+
+Perf-critical op for the falcon-mamba / jamba architectures.  The recurrence
+
+    x_t = exp(dt_t * A) * x_{t-1} + (dt_t * u_t) B_t
+    y_t = x_t . C_t + D_skip * u_t
+
+is chunked along time: the grid is (batch, n_chunks) with the chunk dimension
+sequential, and the (D, N) SSM state lives in a VMEM scratch that persists
+across grid steps (the TPU grid is executed in order) -- the same
+output/state-stationary streaming pattern as the MM-Engine.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _scan_kernel(u_ref, dt_ref, b_ref, c_ref, a_ref, dskip_ref, y_ref,
+                 x_ref, *, chunk: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        x_ref[...] = jnp.zeros_like(x_ref)
+
+    a = a_ref[...]              # (D, N)
+    dskip = dskip_ref[...]      # (1, D)
+
+    def body(t, x):
+        u = u_ref[0, t, :].astype(jnp.float32)       # (D,)
+        dt = dt_ref[0, t, :].astype(jnp.float32)     # (D,)
+        bt = b_ref[0, t, :].astype(jnp.float32)      # (N,)
+        ct = c_ref[0, t, :].astype(jnp.float32)      # (N,)
+        decay = jnp.exp(dt[:, None] * a)             # (D, N)
+        x = decay * x + (dt * u)[:, None] * bt[None, :]
+        y = jnp.sum(x * ct[None, :], axis=1) + dskip[0] * u
+        y_ref[0, t, :] = y.astype(y_ref.dtype)
+        return x
+
+    x_ref[...] = lax.fori_loop(0, chunk, body, x_ref[...])
+
+
+def mamba_scan(
+    u: jax.Array,       # (B, L, D)
+    delta: jax.Array,   # (B, L, D)  (post-softplus)
+    A: jax.Array,       # (D, N)     (negative)
+    B: jax.Array,       # (B, L, N)
+    C: jax.Array,       # (B, L, N)
+    D_skip: jax.Array,  # (D,)
+    *,
+    chunk: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Returns y (B, L, D).  L must be a multiple of ``chunk`` (ops.py pads)."""
+    bsz, L, d = u.shape
+    n = A.shape[1]
+    assert L % chunk == 0, (L, chunk)
+    grid = (bsz, L // chunk)
+    dchunk = lambda b, c: (b, c, 0)
+    return pl.pallas_call(
+        functools.partial(_scan_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, d), dchunk),
+            pl.BlockSpec((1, chunk, d), dchunk),
+            pl.BlockSpec((1, chunk, n), dchunk),
+            pl.BlockSpec((1, chunk, n), dchunk),
+            pl.BlockSpec((d, n), lambda b, c: (0, 0)),
+            pl.BlockSpec((1, d), lambda b, c: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, d), dchunk),
+        out_shape=jax.ShapeDtypeStruct((bsz, L, d), u.dtype),
+        scratch_shapes=[pltpu.VMEM((d, n), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+        name="mamba_scan",
+    )(u, delta, B, C, A.astype(jnp.float32),
+      D_skip.astype(jnp.float32)[None, :])

@@ -1,0 +1,82 @@
+"""MM-Engine: block-streaming tiled matmul (paper Sec. VI-A) as a Pallas
+TPU kernel.
+
+FPGA -> TPU mapping: each T x T systolic array becomes one MXU pass over an
+MXU-aligned (block_m x block_n) output tile held *stationary* in a VMEM
+scratch accumulator (the paper's per-array "matrix accumulator"); operand
+tiles stream HBM->VMEM along the contraction grid dimension (the paper's
+"block streaming"); the LHS block is re-fetched once per (i, k) and re-used
+across the whole j grid row -- the shared-LHS-cache broadcast -- while RHS
+blocks are private per (j, k).  The parallelism index S maps onto the
+parallel (i, j) grid dimensions.
+
+Accumulation is always fp32 (as is the FPGA accumulator), regardless of the
+input dtype.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _mm_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k: int, out_dtype):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # one streamed tile-product accumulated into the stationary output tile
+    acc_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == n_k - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(out_dtype)
+
+
+def mm_engine(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+    out_dtype=None,
+    interpret: bool = False,
+) -> jax.Array:
+    """a @ b with explicit (block_m, block_n, block_k) VMEM tiling.
+
+    Shapes must be multiples of the block sizes (``ops.mm_engine_matmul``
+    pads arbitrary shapes -- the paper's Matrix Padding Unit).
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0, (
+        (m, n, k), (block_m, block_n, block_k))
+    out_dtype = out_dtype or a.dtype
+    n_k = k // block_k
+
+    grid = (m // block_m, n // block_n, n_k)
+    return pl.pallas_call(
+        functools.partial(_mm_kernel, n_k=n_k, out_dtype=out_dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+        name="mm_engine",
+    )(a, b)

@@ -1,0 +1,3 @@
+from . import accounting, mesh, steps
+
+__all__ = ["accounting", "mesh", "steps"]

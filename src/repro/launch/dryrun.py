@@ -1,0 +1,324 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware: SPMD
+partitioning must succeed for the 16x16 (single-pod, 256-chip) mesh and the
+2x16x16 (512-chip) multi-pod mesh for every assigned architecture and input
+shape.  Prints ``compiled.memory_analysis()`` (fits?) and
+``compiled.cost_analysis()`` (FLOPs/bytes for the roofline), parses the
+collective bytes out of the optimized HLO, and writes one JSON record per
+cell into --out (resumable: cells already present are skipped).
+
+Usage:
+  python -m repro.launch.dryrun --arch olmo-1b --shape train_4k
+  python -m repro.launch.dryrun --all [--multipod] [--out experiments/dryrun]
+"""
+import argparse
+import json
+import pathlib
+import re
+import subprocess
+import sys
+import time
+
+import jax
+
+# v5e hardware constants (targets; the container runs CPU)
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # bytes/s / chip
+ICI_BW = 50e9              # bytes/s / link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^)]*\)|\S+)\s+([\w\-]+)")
+_COLL_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_TYPE_RE = re.compile(r"(f64|f32|bf16|f16|f8e4m3fn|f8e5m2|s64|u64|s32|"
+                      r"u32|s16|u16|s8|u8|pred)\[([0-9,]*)\]")
+_OPND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _TYPE_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str):
+    """Sum *operand* bytes of every collective in the (per-device,
+    SPMD-partitioned) optimized HLO.  Operands print without types, so a
+    first pass builds a symbol table of instruction result sizes; ``-done``/
+    ``-update`` halves of async pairs are skipped so each collective counts
+    once."""
+    sizes = {}
+    colls = []  # (kind, line, opname_end)
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, type_str, opname = m.groups()
+        sizes[name] = _type_bytes(type_str)
+        base = opname.replace("-start", "")
+        if opname.endswith(("-done", "-update")):
+            continue
+        if base in _COLL_KINDS:
+            colls.append((base, line, m.end()))
+    per_kind = {}
+    for kind, line, op_end in colls:
+        paren = line.find("(", op_end)
+        if paren < 0:
+            continue
+        depth, end = 0, len(line)
+        for i in range(paren, len(line)):
+            if line[i] == "(":
+                depth += 1
+            elif line[i] == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        operands = _OPND_RE.findall(line[paren:end + 1])
+        total = sum(sizes.get(o, 0) for o in operands)
+        per_kind[kind] = per_kind.get(kind, 0) + total
+    return per_kind
+
+
+def _compile_cell(cfg, shape, mesh, moments):
+    from repro.launch import steps as steps_mod
+    from repro.optim.adamw import AdamWConfig
+
+    kw = {}
+    if shape.kind == "train":
+        kw["opt_cfg"] = AdamWConfig(moment_dtype=moments)
+    step, in_sh, out_sh, abstract_args, rules = steps_mod.build_step(
+        shape.kind, cfg, mesh, shape, **kw)
+    donate = ()
+    if shape.kind == "train":
+        donate = (0,)
+    elif shape.kind == "decode":
+        donate = (1,)
+    with mesh:
+        jitted = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                         donate_argnums=donate)
+        lowered = jitted.lower(*abstract_args)
+        compiled = lowered.compile()
+    return compiled
+
+
+def _cost_measures(compiled):
+    cost = compiled.cost_analysis()
+    colls = collective_bytes(compiled.as_text())
+    return (float(cost.get("flops", 0.0)),
+            float(cost.get("bytes accessed", 0.0)), colls)
+
+
+def _extrapolated_costs(cfg, shape, mesh, moments):
+    """lax.scan bodies are counted once by cost_analysis, so lower UNROLLED
+    1-group and 2-group variants and extrapolate linearly to the full depth:
+    total(G) = c1 + (G - 1) * (c2 - c1).  Exact because groups are
+    structurally identical under SPMD."""
+    import dataclasses
+    from repro.models.transformer import period
+
+    per = period(cfg)
+    n_groups = cfg.n_layers // per
+    big = 1 << 30
+    enc_groups = cfg.encoder_layers  # encoder period is 1
+    out = []
+    for k in (1, 2):
+        cfg_k = dataclasses.replace(
+            cfg, n_layers=per * k,
+            encoder_layers=(k if enc_groups else 0),
+            scan_layers=False, attn_chunk=big, mamba_chunk=big)
+        out.append(_cost_measures(_compile_cell(cfg_k, shape, mesh, moments)))
+    (f1, b1, c1), (f2, b2, c2) = out
+    g = n_groups if not enc_groups else max(n_groups, enc_groups)
+    flops = f1 + (g - 1) * (f2 - f1)
+    byts = b1 + (g - 1) * (b2 - b1)
+    kinds = set(c1) | set(c2)
+    colls = {k: c1.get(k, 0) + (g - 1) * (c2.get(k, 0) - c1.get(k, 0))
+             for k in kinds}
+    return flops, byts, colls
+
+
+def _parse_overrides(pairs):
+    out = {}
+    for kv in pairs or ():
+        k, v = kv.split("=", 1)
+        for cast in (int, float):
+            try:
+                v = cast(v)
+                break
+            except ValueError:
+                continue
+        if v in ("True", "False"):
+            v = v == "True"
+        out[k] = v
+    return out
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             moments: str = "float32", verbose: bool = True,
+             no_cost: bool = False, overrides=None) -> dict:
+    import dataclasses as _dc
+    from repro.configs import get_config, SHAPES, applicable, input_specs
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch import accounting
+
+    cfg = get_config(arch)
+    if overrides:
+        cfg = _dc.replace(cfg, **overrides)
+    shape = SHAPES[shape_name]
+    skip = applicable(cfg, shape)
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "kind": shape.kind, "moments": moments,
+           "overrides": overrides or {}}
+    if skip:
+        rec["skipped"] = skip
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    t0 = time.time()
+    compiled = _compile_cell(cfg, shape, mesh, moments)
+    t_compile = time.time() - t0
+    t_lower = 0.0
+
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    scanned_colls = collective_bytes(hlo)
+
+    t1 = time.time()
+    if no_cost:
+        # multi-pod cells prove compile+memory only; roofline is single-pod
+        flops_dev, bytes_dev, colls = 0.0, 0.0, dict(scanned_colls)
+    else:
+        flops_dev, bytes_dev, colls = _extrapolated_costs(cfg, shape, mesh,
+                                                          moments)
+    t_cost = time.time() - t1
+    coll_dev = float(sum(colls.values()))
+    model_f = accounting.model_flops(cfg, shape)
+    counts = accounting.param_counts(cfg)
+
+    # cost_analysis/HLO are for the per-device SPMD program; the roofline
+    # formulas use global = per-device * chips, so the terms reduce to
+    # per-device quantities over per-chip peaks.
+    rec.update({
+        "chips": chips,
+        "compile_s": round(t_compile, 1),
+        "cost_extraction_s": round(t_cost, 1),
+        "scanned_hlo_collectives": scanned_colls,
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "alias_bytes": getattr(mem, "alias_size_in_bytes", None),
+        },
+        "flops_per_device": flops_dev,
+        "hlo_flops_global": flops_dev * chips,
+        "bytes_per_device": bytes_dev,
+        "collective_bytes_per_device": coll_dev,
+        "collectives": colls,
+        "model_flops": model_f,
+        "param_count": counts["total"],
+        "active_params": counts["active"],
+        "roofline": {
+            "compute_s": flops_dev / PEAK_FLOPS,
+            "memory_s": bytes_dev / HBM_BW,
+            "collective_s": coll_dev / ICI_BW,
+        },
+        "useful_flops_ratio": (model_f / (flops_dev * chips)
+                               if flops_dev else None),
+    })
+    r = rec["roofline"]
+    dom = max(r, key=r.get)
+    rec["dominant"] = dom
+    if verbose:
+        print(f"== {arch} x {shape_name} on {rec['mesh']} "
+              f"({shape.kind}) ==")
+        print(f"  compile {t_compile:.1f}s (+{t_cost:.1f}s cost extraction)")
+        print(f"  memory_analysis: {mem}")
+        print(f"  cost_analysis: flops={flops_dev:.3e}/dev "
+              f"bytes={bytes_dev:.3e}/dev")
+        print(f"  collectives: { {k: f'{v:.3e}' for k, v in colls.items()} }")
+        print(f"  roofline: compute={r['compute_s']:.4f}s "
+              f"memory={r['memory_s']:.4f}s "
+              f"collective={r['collective_s']:.4f}s -> {dom}-bound")
+        print(f"  MODEL_FLOPS/HLO_FLOPS = {rec['useful_flops_ratio'] and round(rec['useful_flops_ratio'], 3)}")
+    return rec
+
+
+def cell_id(arch, shape, multi_pod, moments="float32"):
+    pod = "mp" if multi_pod else "sp"
+    return f"{arch}__{shape}__{pod}__{moments}"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--moments", default="float32")
+    ap.add_argument("--no-cost", action="store_true")
+    ap.add_argument("--override", action="append", default=[],
+                    help="cfg overrides key=value (hillclimb variants)")
+    ap.add_argument("--tag", default=None, help="suffix for the output file")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    out_dir = pathlib.Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    if args.all:
+        from repro.configs import ARCH_IDS, SHAPES
+        meshes = [False, True]
+        failures = []
+        for arch in ARCH_IDS:
+            for shape in SHAPES:
+                for mp in meshes:
+                    cid = cell_id(arch, shape, mp, args.moments)
+                    f = out_dir / f"{cid}.json"
+                    if f.exists():
+                        continue
+                    cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                           "--arch", arch, "--shape", shape,
+                           "--moments", args.moments, "--out", str(out_dir)]
+                    if mp:
+                        cmd.extend(["--multipod", "--no-cost"])
+                    print(f">>> {cid}", flush=True)
+                    r = subprocess.run(cmd, env={**os.environ},
+                                       capture_output=True, text=True)
+                    if r.returncode != 0:
+                        failures.append(cid)
+                        (out_dir / f"{cid}.err").write_text(
+                            r.stdout[-4000:] + "\n" + r.stderr[-8000:])
+                        print(f"    FAILED (see {cid}.err)", flush=True)
+                    else:
+                        print(r.stdout[-1200:], flush=True)
+        print(f"done; {len(failures)} failures: {failures}")
+        return
+
+    rec = run_cell(args.arch, args.shape, args.multipod, args.moments,
+                   no_cost=args.no_cost,
+                   overrides=_parse_overrides(args.override))
+    cid = cell_id(args.arch, args.shape, args.multipod, args.moments)
+    if args.tag:
+        cid += f"__{args.tag}"
+    (out_dir / f"{cid}.json").write_text(json.dumps(rec, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,107 @@
+"""Batched serving: prefill the prompt batch, then step the decode loop
+against the (donated, in-place) KV cache.  Reports prefill and per-token
+decode latency/throughput.
+
+CPU demo:
+  PYTHONPATH=src python -m repro.launch.serve --arch olmo-1b --reduced \
+      --batch 4 --prompt-len 32 --gen-len 16
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduced_config
+from repro.models import transformer as tfm
+from repro.parallel.sharding import rules_for_mesh
+from repro.runtime import pick_mesh
+
+
+def sample(logits, key, temperature: float = 0.0):
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(key, logits / temperature).astype(jnp.int32)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo-1b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen-len", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = (reduced_config(args.arch) if args.reduced
+           else get_config(args.arch))
+    mesh = pick_mesh(args.model_parallel)
+    cfg = dataclasses.replace(cfg, tp=mesh.shape["model"])
+    rules = rules_for_mesh(mesh)
+
+    rng = np.random.default_rng(args.seed)
+    params = tfm.param_values(tfm.init_model(jax.random.PRNGKey(args.seed),
+                                             cfg))
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size,
+                                      (args.batch, args.prompt_len)),
+                         jnp.int32)
+    batch = {"tokens": tokens}
+    if cfg.family == "vlm":
+        batch["patches"] = jnp.zeros((args.batch, cfg.n_patches, cfg.d_model),
+                                     cfg.jdtype())
+    if cfg.family == "encdec":
+        batch["frames"] = jnp.zeros((args.batch, cfg.n_frames, cfg.d_model),
+                                    cfg.jdtype())
+
+    cache_len = args.prompt_len + args.gen_len + (
+        cfg.n_patches if cfg.family == "vlm" else 0)
+
+    with mesh:
+        prefill = jax.jit(
+            lambda p, b: tfm.prefill(p, b, cfg, rules, cache_len=cache_len))
+        decode = jax.jit(
+            lambda p, s, t: tfm.decode_step(p, s, t, cfg, rules),
+            donate_argnums=(1,))
+
+        t0 = time.time()
+        logits, state = jax.block_until_ready(prefill(params, batch))
+        t_prefill = time.time() - t0
+
+        key = jax.random.PRNGKey(args.seed)
+        tok = sample(logits, key, args.temperature)
+        out = [np.asarray(tok)]
+        # warm-up decode compile outside the timed loop
+        logits, state = decode(params, state, tok)
+        jax.block_until_ready(logits)
+        t0 = time.time()
+        for i in range(1, args.gen_len):
+            key, sub = jax.random.split(key)
+            tok = sample(logits, sub, args.temperature)
+            out.append(np.asarray(tok))
+            logits, state = decode(params, state, tok)
+        jax.block_until_ready(logits)
+        t_decode = time.time() - t0
+
+    gen = np.stack(out, axis=1)
+    per_tok = t_decode / max(1, args.gen_len - 1)
+    print(json.dumps({
+        "arch": cfg.name,
+        "prefill_s": round(t_prefill, 4),
+        "decode_per_token_s": round(per_tok, 5),
+        "decode_tokens_per_s": round(args.batch / per_tok, 1),
+        "generated_shape": list(gen.shape),
+        "sample_tokens": gen[0, :8].tolist(),
+    }), flush=True)
+    return gen
+
+
+if __name__ == "__main__":
+    main()

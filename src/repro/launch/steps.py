@@ -1,0 +1,179 @@
+"""Jittable train / prefill / serve steps with full sharding trees.
+
+``build_train_step`` / ``build_prefill`` / ``build_serve_step`` return
+(step_fn, in_shardings, out_shardings, abstract_args) ready for
+``jax.jit(...).lower(...)`` -- the single entry point used by the dry-run,
+the trainer and the server.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.shapes import ShapeCell, input_specs
+from repro.models import transformer as tfm
+from repro.models.config import ModelConfig
+from repro.optim import adamw
+from repro.optim import compression as comp
+from repro.parallel.sharding import Rules, is_axes, rules_for_mesh
+
+from . import accounting
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: adamw.OptState
+    step: jax.Array
+    comp: Any = None   # optional PCA gradient-compression state
+
+
+def rules_for_cell(mesh, cfg: ModelConfig, shape: Optional[ShapeCell] = None,
+                   fsdp: bool = True) -> Rules:
+    data = 1
+    for ax in ("pod", "data"):
+        if ax in mesh.axis_names:
+            data *= mesh.shape[ax]
+    seq_over_data = bool(shape and shape.kind == "decode"
+                         and shape.global_batch < data)
+    return rules_for_mesh(mesh, fsdp=fsdp, seq_over_data=seq_over_data)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeCell, rules: Rules):
+    """PartitionSpecs for each input of this cell."""
+    specs = input_specs(cfg, shape)
+    b = rules.axis("batch")
+    if shape.kind in ("train", "prefill"):
+        out = {"tokens": P(b, None)}
+        if "patches" in specs:
+            out["patches"] = P(b, None, None)
+        if "frames" in specs:
+            out["frames"] = P(b, None, None)
+        return out
+    state_ax = tfm.decode_state_axes(cfg)
+    state_spec = jax.tree.map(lambda ax: rules.spec(*ax), state_ax,
+                              is_leaf=is_axes)
+    return {"token": P(b), "state": state_spec}
+
+
+def param_spec_tree(cfg: ModelConfig, rules: Rules, abstract_params):
+    axes = tfm.param_axes(abstract_params)
+    return jax.tree.map(lambda ax: rules.spec(*ax), axes, is_leaf=is_axes)
+
+
+def train_state_specs(cfg: ModelConfig, rules: Rules, abstract_params,
+                      opt_cfg: adamw.AdamWConfig):
+    pspec = param_spec_tree(cfg, rules, abstract_params)
+    axes = tfm.param_axes(abstract_params)
+    m_spec = jax.tree.map(lambda ax: rules.spec(*ax),
+                          adamw.moment_axes(axes, opt_cfg, "m"),
+                          is_leaf=is_axes)
+    v_spec = jax.tree.map(lambda ax: rules.spec(*ax),
+                          adamw.moment_axes(axes, opt_cfg, "v"),
+                          is_leaf=is_axes)
+    return TrainState(params=pspec,
+                      opt=adamw.OptState(m=m_spec, v=v_spec, count=P()),
+                      step=P())
+
+
+# ---------------------------------------------------------------------------
+# step builders
+# ---------------------------------------------------------------------------
+
+def build_train_step(cfg: ModelConfig, mesh, shape: ShapeCell,
+                     opt_cfg: Optional[adamw.AdamWConfig] = None,
+                     comp_cfg: Optional[comp.CompressionConfig] = None):
+    opt_cfg = opt_cfg or adamw.AdamWConfig()
+    rules = rules_for_cell(mesh, cfg, shape)
+
+    def train_step(state: TrainState, batch):
+        def loss(p):
+            return tfm.loss_fn(p, batch, cfg, rules)
+
+        (l, metrics), grads = jax.value_and_grad(loss, has_aux=True)(
+            state.params)
+        new_comp = state.comp
+        if comp_cfg is not None:
+            grads, new_comp, cmetrics = comp.compress_tree(
+                grads, state.comp, comp_cfg)
+        new_p, new_opt, opt_metrics = adamw.update(grads, state.opt,
+                                                   state.params, opt_cfg)
+        metrics = dict(metrics, loss=l, **opt_metrics)
+        return (TrainState(new_p, new_opt, state.step + 1, new_comp),
+                metrics)
+
+    abstract_params = tfm.param_values(tfm.abstract_init(cfg))
+    abstract_opt = jax.eval_shape(
+        functools.partial(adamw.init, cfg=opt_cfg), abstract_params)
+    abstract_comp = None
+    if comp_cfg is not None:
+        abstract_comp = jax.eval_shape(
+            lambda p: comp.init_state(p, comp_cfg, jax.random.PRNGKey(0)),
+            abstract_params)
+    abstract_state = TrainState(
+        params=abstract_params, opt=abstract_opt,
+        step=jax.ShapeDtypeStruct((), jnp.int32), comp=abstract_comp)
+    state_specs = train_state_specs(cfg, rules, tfm.abstract_init(cfg),
+                                    opt_cfg)
+    if comp_cfg is not None:
+        comp_specs = jax.tree.map(lambda _: P(), abstract_comp)
+        state_specs = state_specs._replace(comp=comp_specs)
+    b_specs = batch_specs(cfg, shape, rules)
+    abstract_batch = input_specs(cfg, shape)
+    in_sh = (jax.tree.map(lambda s: NamedSharding(mesh, s), state_specs,
+                          is_leaf=lambda x: isinstance(x, P)),
+             jax.tree.map(lambda s: NamedSharding(mesh, s), b_specs,
+                          is_leaf=lambda x: isinstance(x, P)))
+    out_sh = (in_sh[0], None)
+    return train_step, in_sh, out_sh, (abstract_state, abstract_batch), rules
+
+
+def build_prefill(cfg: ModelConfig, mesh, shape: ShapeCell):
+    rules = rules_for_cell(mesh, cfg, shape)
+
+    def prefill_step(params, batch):
+        return tfm.prefill(params, batch, cfg, rules)
+
+    abstract_params = tfm.param_values(tfm.abstract_init(cfg))
+    pspec = param_spec_tree(cfg, rules, tfm.abstract_init(cfg))
+    b_specs = batch_specs(cfg, shape, rules)
+    abstract_batch = input_specs(cfg, shape)
+    in_sh = (jax.tree.map(lambda s: NamedSharding(mesh, s), pspec,
+                          is_leaf=lambda x: isinstance(x, P)),
+             jax.tree.map(lambda s: NamedSharding(mesh, s), b_specs,
+                          is_leaf=lambda x: isinstance(x, P)))
+    return prefill_step, in_sh, None, (abstract_params, abstract_batch), rules
+
+
+def build_serve_step(cfg: ModelConfig, mesh, shape: ShapeCell):
+    """One-token decode against a KV cache of shape.seq_len."""
+    rules = rules_for_cell(mesh, cfg, shape)
+
+    def serve_step(params, state, token):
+        logits, new_state = tfm.decode_step(params, state, token, cfg, rules)
+        next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_token, logits, new_state
+
+    abstract_params = tfm.param_values(tfm.abstract_init(cfg))
+    specs = input_specs(cfg, shape)
+    pspec = param_spec_tree(cfg, rules, tfm.abstract_init(cfg))
+    b_specs = batch_specs(cfg, shape, rules)
+    in_sh = (jax.tree.map(lambda s: NamedSharding(mesh, s), pspec,
+                          is_leaf=lambda x: isinstance(x, P)),
+             jax.tree.map(lambda s: NamedSharding(mesh, s), b_specs["state"],
+                          is_leaf=lambda x: isinstance(x, P)),
+             NamedSharding(mesh, b_specs["token"]))
+    abstract_args = (abstract_params, specs["state"], specs["token"])
+    return serve_step, in_sh, None, abstract_args, rules
+
+
+def build_step(kind: str, cfg: ModelConfig, mesh, shape: ShapeCell, **kw):
+    if kind == "train":
+        return build_train_step(cfg, mesh, shape, **kw)
+    if kind == "prefill":
+        return build_prefill(cfg, mesh, shape)
+    return build_serve_step(cfg, mesh, shape)

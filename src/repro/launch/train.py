@@ -1,0 +1,162 @@
+"""End-to-end trainer: data pipeline -> sharded train step -> checkpoints,
+with watchdog stall detection, straggler accounting, preemption-safe
+SIGTERM handling and elastic resume.
+
+CPU demo (reduced config):
+  PYTHONPATH=src python -m repro.launch.train --arch olmo-1b --reduced \
+      --steps 50 --global-batch 8 --seq-len 128
+
+On a real cluster the same entry point runs the full config on the
+production mesh (--mesh 16x16) across processes.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import signal
+import sys
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import checkpointer
+from repro.configs import get_config, reduced_config
+from repro.configs.shapes import ShapeCell
+from repro.data import DataConfig, TokenPipeline
+from repro.launch import steps as steps_mod
+from repro.models import transformer as tfm
+from repro.optim import adamw
+from repro.optim import compression as comp
+from repro.runtime import STALL_EXIT_CODE, Watchdog, pick_mesh
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo-1b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--moments", default="float32")
+    ap.add_argument("--compress-grads", type=int, default=0,
+                    help="PCA gradient compression rank (0 = off)")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--preempt-at", type=int, default=0,
+                    help="simulate preemption: checkpoint + stop after N steps")
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = (reduced_config(args.arch) if args.reduced
+           else get_config(args.arch))
+    mesh = pick_mesh(args.model_parallel)
+    cfg = dataclasses.replace(cfg, tp=mesh.shape["model"])
+    shape = ShapeCell("cli", args.seq_len, args.global_batch, "train")
+    opt_cfg = adamw.AdamWConfig(lr=args.lr, moment_dtype=args.moments,
+                                warmup_steps=max(2, args.steps // 10),
+                                decay_steps=args.steps)
+    comp_cfg = (comp.CompressionConfig(rank=args.compress_grads)
+                if args.compress_grads else None)
+
+    step_fn, in_sh, out_sh, _, rules = steps_mod.build_train_step(
+        cfg, mesh, shape, opt_cfg=opt_cfg, comp_cfg=comp_cfg)
+
+    pipe = TokenPipeline(DataConfig(
+        seq_len=args.seq_len, global_batch=args.global_batch,
+        vocab_size=cfg.vocab_size, seed=args.seed),
+        process_index=jax.process_index(),
+        process_count=jax.process_count())
+
+    def init_state():
+        params = tfm.param_values(
+            tfm.init_model(jax.random.PRNGKey(args.seed), cfg))
+        comp_state = (comp.init_state(params, comp_cfg,
+                                      jax.random.PRNGKey(args.seed + 1))
+                      if comp_cfg else None)
+        return steps_mod.TrainState(
+            params=params, opt=adamw.init(params, opt_cfg),
+            step=jnp.zeros((), jnp.int32), comp=comp_state)
+
+    with mesh:
+        state = init_state()
+        start_step = 0
+        if args.ckpt_dir and checkpointer.latest_step(args.ckpt_dir) is not None:
+            state, meta = checkpointer.restore(args.ckpt_dir, state)
+            pipe.restore(meta.get("data", {"step": 0}))
+            start_step = int(meta.get("step", 0))
+            print(f"[train] resumed from step {start_step}", flush=True)
+
+        jitted = jax.jit(step_fn, in_shardings=in_sh, out_shardings=out_sh,
+                         donate_argnums=(0,))
+
+        stop = {"flag": False, "reason": None}
+
+        def _sigterm(signum, frame):
+            stop["flag"] = True
+            stop["reason"] = f"signal {signum}"
+
+        signal.signal(signal.SIGTERM, _sigterm)
+        signal.signal(signal.SIGINT, _sigterm)
+
+        def save(step):
+            if not args.ckpt_dir:
+                return
+            checkpointer.save(args.ckpt_dir, step, state,
+                              metadata={"step": step, "data": pipe.state(),
+                                        "arch": cfg.name})
+
+        wd = Watchdog(on_stall=lambda: None)
+        losses = []
+        for step in range(start_step, args.steps):
+            tokens = pipe.batch_at(step)[:, : args.seq_len]
+            batch = {"tokens": jnp.asarray(tokens)}
+            if cfg.family == "vlm":
+                batch["patches"] = jnp.zeros(
+                    (tokens.shape[0], cfg.n_patches, cfg.d_model),
+                    cfg.jdtype())
+            if cfg.family == "encdec":
+                batch["frames"] = jnp.zeros(
+                    (tokens.shape[0], cfg.n_frames, cfg.d_model),
+                    cfg.jdtype())
+            wd.start_step(step)
+            state, metrics = jitted(state, batch)
+            loss = float(metrics["loss"])
+            dt = wd.end_step()
+            losses.append(loss)
+            if wd.stalled:
+                save(step)
+                print("[train] stall detected -> emergency checkpoint",
+                      flush=True)
+                sys.exit(STALL_EXIT_CODE)
+            if step % args.log_every == 0 or step == args.steps - 1:
+                print(f"[train] step {step} loss {loss:.4f} "
+                      f"({dt*1000:.0f} ms, lr {float(metrics['lr']):.2e}, "
+                      f"gnorm {float(metrics['grad_norm']):.2f})",
+                      flush=True)
+            if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
+                save(step + 1)
+            if args.preempt_at and step + 1 >= args.preempt_at:
+                save(step + 1)
+                print(f"[train] simulated preemption at {step + 1}",
+                      flush=True)
+                return losses
+            if stop["flag"]:
+                save(step + 1)
+                print(f"[train] preempted ({stop['reason']}); "
+                      f"checkpointed at {step + 1}", flush=True)
+                sys.exit(STALL_EXIT_CODE)
+        save(args.steps)
+        print(json.dumps({"final_loss": losses[-1],
+                          "first_loss": losses[0],
+                          "watchdog": wd.summary()}), flush=True)
+        return losses
+
+
+if __name__ == "__main__":
+    main()

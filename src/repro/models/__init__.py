@@ -1,0 +1,5 @@
+from .config import ModelConfig
+from . import attention, layers, mamba, moe, transformer
+
+__all__ = ["ModelConfig", "attention", "layers", "mamba", "moe",
+           "transformer"]

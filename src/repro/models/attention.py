@@ -1,0 +1,276 @@
+"""GQA/MQA/MHA attention with TP head-padding, chunked (flash-style) train
+attention, and sequence-sharded KV-cache decode (SP).
+
+Design notes (see DESIGN.md "Parallelism design"):
+  * Query heads are padded to a multiple of the TP width; padded-head q
+    projections are zero-initialised and the attention output is masked on
+    the padded heads, which keeps both the forward math and all gradients
+    exact while letting every arch shard heads over "model".
+  * K/V projections keep the TRUE head count and are replicated over TP
+    (they are small); for train/prefill they are gathered into per-query-head
+    form (group replication -- standard Megatron GQA) and sharded.
+  * Decode attends with true KV heads against a KV cache sharded on the
+    SEQUENCE dim ("seq_tp"): a distributed softmax (partial max/denominator
+    reduced by XLA across shards) makes 32k-500k KV fit at any head count.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.parallel.sharding import Px
+from .config import ModelConfig
+from .layers import _normal, apply_rope
+
+_NEG = -1e30
+
+
+class KVCache(NamedTuple):
+    k: jax.Array  # (B, S, KV, hd)
+    v: jax.Array  # (B, S, KV, hd)
+
+
+def init_attention(key, cfg: ModelConfig, cross: bool = False):
+    dt = cfg.jdtype()
+    d, hd = cfg.d_model, cfg.head_dim
+    H, KV = cfg.padded_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    sq = 1.0 / math.sqrt(d)
+    wq = _normal(ks[0], (d, H, hd), dt, sq)
+    if H > cfg.n_heads:  # zero the padded head slice (exactness, see above)
+        wq = wq.at[:, cfg.n_heads:, :].set(0)
+    # ring mode: heads are NOT the parallel dim -> attention weights are
+    # replicated over "model" (sharded only via fsdp)
+    head_tp = None if cfg.attn_impl == "ring" else "tp"
+    p = {
+        "wq": Px(wq, ("fsdp", head_tp, None)),
+        "wk": Px(_normal(ks[1], (d, KV, hd), dt, sq), ("fsdp", None, None)),
+        "wv": Px(_normal(ks[2], (d, KV, hd), dt, sq), ("fsdp", None, None)),
+        "wo": Px(_normal(ks[3], (H, hd, d), dt, 1.0 / math.sqrt(H * hd)),
+                 (head_tp, None, "fsdp")),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = Px(jnp.zeros((H, hd), dt), (head_tp, None))
+        p["bk"] = Px(jnp.zeros((KV, hd), dt), (None, None))
+        p["bv"] = Px(jnp.zeros((KV, hd), dt), (None, None))
+    return p
+
+
+def _kv_map(cfg: ModelConfig) -> np.ndarray:
+    """query-head -> kv-head index (padded heads clamp to the last group)."""
+    g = cfg.group_size
+    return np.minimum(np.arange(cfg.padded_heads) // g, cfg.n_kv_heads - 1)
+
+
+def _head_mask(cfg: ModelConfig, dtype):
+    m = (np.arange(cfg.padded_heads) < cfg.n_heads).astype(np.float32)
+    return jnp.asarray(m, dtype)[None, None, :, None]
+
+
+def _qkv(p, x, kv_x, cfg: ModelConfig, rules, positions, kv_positions,
+         rope: bool):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", kv_x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", kv_x, p["wv"])
+    if "bq" in p:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, kv_positions, cfg.rope_theta)
+    q = rules.shard(q, "batch", "seq", "tp", None)
+    return q, k, v
+
+
+def _expand_kv(k, cfg: ModelConfig, rules):
+    """replicate true KV heads into padded query-head layout, then shard."""
+    k = jnp.take(k, jnp.asarray(_kv_map(cfg)), axis=2)
+    return rules.shard(k, "batch", "seq", "tp", None)
+
+
+def _dense_attention(q, k, v, causal: bool, scale: float):
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        sq, sk = q.shape[1], k.shape[1]
+        mask = jnp.tril(jnp.ones((sq, sk), bool), sk - sq)
+        s = jnp.where(mask[None, None], s, _NEG)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", w, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def _chunked_attention(q, k, v, causal: bool, scale: float, chunk: int):
+    """Online-softmax over KV chunks (flash dataflow in pure jnp): keeps the
+    peak score tensor at (B, H, Sq, chunk)."""
+    b, sq, h, hd = q.shape
+    skv = k.shape[1]
+    nc = skv // chunk
+    assert skv % chunk == 0
+    qf = q.astype(jnp.float32)
+    kc = k.reshape(b, nc, chunk, h, hd).swapaxes(0, 1).astype(jnp.float32)
+    vc = v.reshape(b, nc, chunk, h, hd).swapaxes(0, 1).astype(jnp.float32)
+
+    rows = jnp.arange(sq)[:, None] + (skv - sq)  # absolute q positions
+
+    def step(carry, inputs):
+        m, l, acc, j = carry[0], carry[1], carry[2], carry[3]
+        kj, vj = inputs
+        s = jnp.einsum("bqhd,bkhd->bhqk", qf, kj) * scale
+        if causal:
+            cols = j * chunk + jnp.arange(chunk)[None, :]
+            s = jnp.where((rows >= cols)[None, None], s, _NEG)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p_ = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + jnp.sum(p_, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum("bhqk,bkhd->bhqd", p_, vj)
+        return (m_new, l, acc, j + 1), None
+
+    m0 = jnp.full((b, h, sq), _NEG, jnp.float32)
+    l0 = jnp.zeros((b, h, sq), jnp.float32)
+    a0 = jnp.zeros((b, h, sq, hd), jnp.float32)
+    (m, l, acc, _), _ = lax.scan(step, (m0, l0, a0, jnp.int32(0)), (kc, vc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.swapaxes(1, 2).astype(q.dtype)  # (B, Sq, H, hd)
+
+
+def self_attention(p, x, cfg: ModelConfig, rules, positions, *,
+                   causal: bool = True, chunk: Optional[int] = None,
+                   return_cache: bool = False):
+    """Train / prefill self-attention over the full sequence."""
+    chunk = chunk or cfg.attn_chunk
+    rope = cfg.pos_embed == "rope"
+    q, k_true, v_true = _qkv(p, x, x, cfg, rules, positions, positions, rope)
+    scale = cfg.head_dim ** -0.5
+    if (cfg.attn_impl == "ring" and rules.mesh is not None
+            and rules.axis("seq_tp")):
+        from repro.parallel.ring_attention import ring_attention
+        # TRUE GQA KV rotates (G x fewer ppermute bytes); group expansion
+        # happens inside the ring body
+        q = rules.shard(q, "batch", "seq_tp", None, None)
+        kx = rules.shard(k_true, "batch", "seq_tp", None, None)
+        vx = rules.shard(v_true, "batch", "seq_tp", None, None)
+        batch_ax = rules.axis("batch")
+        out = ring_attention(
+            q, kx, vx, rules.mesh, seq_axis=rules.axis("seq_tp"),
+            batch_axes=(batch_ax if isinstance(batch_ax, tuple)
+                        else (batch_ax,)),
+            causal=causal, scale=scale, unroll=not cfg.scan_layers)
+        out = rules.shard(out, "batch", "seq_tp", None, None)
+        y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+        if not return_cache:
+            return y, None
+        cache = KVCache(
+            rules.shard(k_true, "batch", "seq_tp", None, None),
+            rules.shard(v_true, "batch", "seq_tp", None, None))
+        return y, cache
+    k = _expand_kv(k_true, cfg, rules)
+    v = _expand_kv(v_true, cfg, rules)
+    if x.shape[1] > chunk and x.shape[1] % chunk == 0:
+        out = _chunked_attention(q, k, v, causal, scale, chunk)
+    else:
+        out = _dense_attention(q, k, v, causal, scale)
+    out = out * _head_mask(cfg, out.dtype)
+    out = rules.shard(out, "batch", "seq", "tp", None)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    if not return_cache:
+        return y, None
+    cache = KVCache(
+        rules.shard(k_true, "batch", "seq_tp", None, None),
+        rules.shard(v_true, "batch", "seq_tp", None, None))
+    return y, cache
+
+
+def cross_attention(p, x, enc_kv: KVCache, cfg: ModelConfig, rules):
+    """Decoder->encoder attention against precomputed (cached) enc K/V."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    q = rules.shard(q, "batch", "seq", "tp", None)
+    k = _expand_kv(enc_kv.k, cfg, rules)
+    v = _expand_kv(enc_kv.v, cfg, rules)
+    out = _dense_attention(q, k, v, False, cfg.head_dim ** -0.5)
+    out = out * _head_mask(cfg, out.dtype)
+    out = rules.shard(out, "batch", "seq", "tp", None)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+def decode_attention(p, x, cache: KVCache, pos, cfg: ModelConfig, rules, *,
+                     cross: bool = False):
+    """One-token decode against a sequence-sharded KV cache.
+
+    x: (B, 1, d); cache.k/v: (B, S, KV, hd) sharded ("batch","seq_tp",-,-).
+    Distributed softmax: the max/denominator reductions over the sharded S
+    dim lower to all-reduces; the new token's self-term is merged in closed
+    form, so nothing is ever concatenated across the sharded axis.
+    Returns (y, new_cache); for cross attention the cache is static.
+    """
+    B = x.shape[0]
+    KV, hd = cfg.n_kv_heads, cfg.head_dim
+    H, G = cfg.n_heads, cfg.group_size
+    rope = cfg.pos_embed == "rope" and not cross
+
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])[:, :, :H, :]  # true heads
+    if "bq" in p:
+        q = q + p["bq"][:H]
+    if rope:
+        q = apply_rope(q, jnp.broadcast_to(pos[None, None], (B, 1)),
+                       cfg.rope_theta)
+    qg = q.reshape(B, KV, G, hd).astype(jnp.float32)
+    scale = hd ** -0.5
+
+    kc = cache.k.astype(jnp.float32)
+    vc = cache.v.astype(jnp.float32)
+    s_cache = jnp.einsum("bkgd,bskd->bkgs", qg, kc) * scale  # (B,KV,G,S)
+    # mask never-written cache slots (prefill length tracked via pos)
+    valid = jnp.arange(kc.shape[1])[None, None, None, :] < pos
+    s_cache = jnp.where(valid, s_cache, _NEG)
+
+    if cross:
+        w = jax.nn.softmax(s_cache, axis=-1)
+        out = jnp.einsum("bkgs,bskd->bkgd", w, vc)
+        new_cache = cache
+    else:
+        k_new = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+        v_new = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+        if "bk" in p:
+            k_new = k_new + p["bk"]
+            v_new = v_new + p["bv"]
+        if rope:
+            k_new = apply_rope(k_new, jnp.broadcast_to(pos[None, None], (B, 1)),
+                               cfg.rope_theta)
+        s_self = jnp.einsum("bkgd,bokd->bkgo", qg,
+                            k_new.astype(jnp.float32))[..., 0] * scale
+        m = jnp.maximum(jnp.max(s_cache, axis=-1), s_self)      # all-reduce max
+        e_cache = jnp.exp(s_cache - m[..., None])
+        e_self = jnp.exp(s_self - m)
+        denom = jnp.sum(e_cache, axis=-1) + e_self              # all-reduce sum
+        out = (jnp.einsum("bkgs,bskd->bkgd", e_cache, vc)
+               + e_self[..., None] * v_new.astype(jnp.float32)[:, 0, :, None, :]
+               ) / denom[..., None]
+        # ring-buffer write of the new token at pos % S
+        slot = pos % cache.k.shape[1]
+        new_k = lax.dynamic_update_slice_in_dim(cache.k, k_new.astype(cache.k.dtype), slot, 1)
+        new_v = lax.dynamic_update_slice_in_dim(cache.v, v_new.astype(cache.v.dtype), slot, 1)
+        new_cache = KVCache(rules.shard(new_k, "batch", "seq_tp", None, None),
+                            rules.shard(new_v, "batch", "seq_tp", None, None))
+
+    out = out.reshape(B, 1, KV * G, hd).astype(x.dtype)
+    if cfg.padded_heads > H:
+        out = jnp.pad(out, ((0, 0), (0, 0), (0, cfg.padded_heads - H), (0, 0)))
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, new_cache
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq: int, dtype) -> KVCache:
+    shape = (batch, seq, cfg.n_kv_heads, cfg.head_dim)
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+def cache_axes() -> KVCache:
+    ax = ("batch", "seq_tp", None, None)
+    return KVCache(ax, ax)

@@ -1,0 +1,136 @@
+"""Composable model configuration covering all assigned architecture
+families: dense / MoE / SSM / hybrid / encoder-decoder / VLM backbones."""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.parallel.sharding import pad_to_multiple
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str = "model"
+    family: str = "dense"        # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int = 2
+    d_model: int = 256
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    d_ff: int = 1024
+    vocab_size: int = 1024
+    head_dim: int = 64
+
+    # --- MoE ---
+    n_experts: int = 0
+    top_k: int = 2
+    moe_every: int = 1           # MoE replaces the MLP every k-th layer
+    dense_residual: bool = False # arctic: parallel dense FFN next to MoE
+    shared_expert: bool = False  # llama4: always-on shared expert
+    capacity_factor: float = 1.25
+
+    # --- SSM / hybrid ---
+    ssm_state: int = 0
+    d_conv: int = 4
+    attn_every: int = 0          # hybrid: 1 attention layer per this many
+                                 # (0 = pure attention, -1 = attention-free)
+
+    # --- encoder-decoder (whisper) ---
+    encoder_layers: int = 0
+    n_frames: int = 1500         # stub audio frontend context
+
+    # --- VLM (llava) ---
+    n_patches: int = 0           # stub vision frontend patches
+
+    # --- misc ---
+    norm: str = "rmsnorm"        # rmsnorm | layernorm | nonparametric
+    mlp: str = "swiglu"          # swiglu | gelu
+    qkv_bias: bool = False
+    pos_embed: str = "rope"      # rope | learned
+    rope_theta: float = 1e6
+    tie_embeddings: bool = False
+    dtype: str = "bfloat16"
+    remat: bool = True
+    # lowering knobs: scan_layers=False unrolls the group stack (used by the
+    # dry-run cost extraction, where while-loop bodies would be counted once)
+    scan_layers: bool = True
+    # "chunked" = padded-head TP attention with online-softmax KV chunks;
+    # "ring" = sequence-parallel ring attention (no head padding; attention
+    # params replicated over "model", activations seq-sharded)
+    attn_impl: str = "chunked"
+    attn_chunk: int = 1024
+    mamba_chunk: int = 256
+    # SSM scan element dtype: the (B,S,d_inner,N) scan tensors dominate HBM
+    # traffic; "bfloat16" halves it (fp32 is the numerically-safe default)
+    ssm_dtype: str = "float32"
+    # "scan" = jnp chunked associative scan; "kernel_proxy" = lowering stand-
+    # in with the Pallas mamba_scan kernel's exact HBM I/O (reads u/dt/B/C
+    # once, writes y once; state lives in VMEM) -- used by the dry-run to
+    # measure the fused kernel's roofline, NOT a numerics path
+    ssm_impl: str = "scan"
+
+    # --- sharding-derived (computed) ---
+    tp: int = 16                 # model-axis size the padded dims target
+
+    def jdtype(self):
+        return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[self.dtype]
+
+    @property
+    def d_inner(self) -> int:   # mamba inner width
+        return 2 * self.d_model
+
+    @property
+    def dt_rank(self) -> int:
+        return math.ceil(self.d_model / 16)
+
+    @property
+    def padded_heads(self) -> int:
+        """Query heads padded so TP divides them (zero-padded output rows
+        keep the math exact; waste charged in the roofline).  Ring mode
+        shards sequence instead of heads -> no padding."""
+        if self.attn_impl == "ring":
+            return self.n_heads
+        return pad_to_multiple(self.n_heads, self.tp)
+
+    @property
+    def padded_vocab(self) -> int:
+        return pad_to_multiple(self.vocab_size, self.tp * 8)
+
+    @property
+    def group_size(self) -> int:  # query heads per KV head (GQA)
+        return self.n_heads // self.n_kv_heads
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    def layer_kinds(self) -> Tuple[str, ...]:
+        """Per-layer sequence of "attn" / "mamba" mixers."""
+        if self.family == "ssm":
+            return ("mamba",) * self.n_layers
+        if self.family == "hybrid":
+            k = self.attn_every
+            assert k > 0 and self.n_layers % k == 0
+            kinds = []
+            for i in range(self.n_layers):
+                kinds.append("attn" if (i % k) == (k - 1) else "mamba")
+            return tuple(kinds)
+        return ("attn",) * self.n_layers
+
+    def ffn_kinds(self) -> Tuple[str, ...]:
+        """Per-layer "mlp" / "moe" feed-forward selector."""
+        if self.n_experts == 0:
+            return ("mlp",) * self.n_layers
+        return tuple(
+            "moe" if (i % self.moe_every) == (self.moe_every - 1) else "mlp"
+            for i in range(self.n_layers))
+
+    def validate(self):
+        assert self.d_model % self.tp == 0, (self.name, "d_model % tp")
+        assert self.d_ff % self.tp == 0 or self.d_ff == 0
+        if self.n_experts:
+            assert self.n_experts % self.tp == 0, (self.name, "experts % tp")
+        assert self.n_heads % self.n_kv_heads == 0
+        return self

@@ -1,0 +1,135 @@
+"""Shared layer primitives: norms, RoPE, MLPs, embeddings.
+
+All parameters are ``Px(value, roles)`` leaves (see parallel/sharding.py);
+forward functions take a ``Rules`` object for activation constraints and are
+dtype-polymorphic (compute in fp32 where it matters, store in cfg dtype).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import Px
+from .config import ModelConfig
+
+
+def _normal(key, shape, dtype, scale):
+    return (scale * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def init_norm(cfg: ModelConfig):
+    if cfg.norm == "nonparametric":      # olmo: no scale / bias
+        return {}
+    p = {"scale": Px(jnp.ones((cfg.d_model,), jnp.float32), (None,))}
+    if cfg.norm == "layernorm":
+        p["bias"] = Px(jnp.zeros((cfg.d_model,), jnp.float32), (None,))
+    return p
+
+
+def apply_norm(p, x, cfg: ModelConfig, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "rmsnorm":
+        xf = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+        return (xf * p["scale"]).astype(x.dtype)
+    mean = jnp.mean(xf, -1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mean), -1, keepdims=True)
+    xf = (xf - mean) * jax.lax.rsqrt(var + eps)
+    if cfg.norm == "layernorm":
+        xf = xf * p["scale"] + p["bias"]
+    return xf.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def apply_rope(x, positions, theta: float):
+    """x: (B, S, H, D), positions: (B, S) int32."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_embedding(n_pos: int, d: int):
+    pos = jnp.arange(n_pos, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10000.0, 2 * dim / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=1)
+
+
+# ---------------------------------------------------------------------------
+# dense / MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg: ModelConfig, d_ff: Optional[int] = None):
+    d_ff = d_ff or cfg.d_ff
+    dt = cfg.jdtype()
+    k1, k2, k3 = jax.random.split(key, 3)
+    scale_in = 1.0 / math.sqrt(cfg.d_model)
+    scale_out = 1.0 / math.sqrt(d_ff)
+    p = {
+        "wi": Px(_normal(k1, (cfg.d_model, d_ff), dt, scale_in), ("fsdp", "tp")),
+        "wo": Px(_normal(k3, (d_ff, cfg.d_model), dt, scale_out), ("tp", "fsdp")),
+    }
+    if cfg.mlp == "swiglu":
+        p["wg"] = Px(_normal(k2, (cfg.d_model, d_ff), dt, scale_in), ("fsdp", "tp"))
+    return p
+
+
+def apply_mlp(p, x, cfg: ModelConfig, rules):
+    h = jnp.einsum("bsd,df->bsf", x, p["wi"])
+    if cfg.mlp == "swiglu":
+        g = jnp.einsum("bsd,df->bsf", x, p["wg"])
+        h = jax.nn.silu(g) * h
+    else:
+        h = jax.nn.gelu(h)
+    h = rules.shard(h, "batch", "seq", "tp")
+    return jnp.einsum("bsf,fd->bsd", h, p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# embeddings / unembedding
+# ---------------------------------------------------------------------------
+
+def init_embedding(key, cfg: ModelConfig):
+    dt = cfg.jdtype()
+    k1, k2 = jax.random.split(key)
+    p = {
+        "tok": Px(_normal(k1, (cfg.padded_vocab, cfg.d_model), dt, 0.02),
+                  ("vocab", "fsdp")),
+    }
+    if not cfg.tie_embeddings:
+        p["head"] = Px(
+            _normal(k2, (cfg.d_model, cfg.padded_vocab), dt,
+                    1.0 / math.sqrt(cfg.d_model)), ("fsdp", "vocab"))
+    if cfg.pos_embed == "learned":
+        p["pos"] = Px(_normal(jax.random.fold_in(key, 7),
+                              (4096, cfg.d_model), dt, 0.02), (None, "fsdp"))
+    return p
+
+
+def embed_tokens(p, tokens, cfg: ModelConfig, rules):
+    x = jnp.take(p["tok"], tokens, axis=0)
+    return rules.shard(x, "batch", "seq", None)
+
+
+def unembed(p, x, cfg: ModelConfig, rules):
+    w = p["tok"].T if cfg.tie_embeddings else p["head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, w)
+    logits = rules.shard(logits, "batch", "seq", "vocab")
+    # mask padded vocab entries out of the softmax support
+    vmask = jax.lax.broadcasted_iota(jnp.int32, (1, 1, cfg.padded_vocab), 2)
+    return jnp.where(vmask < cfg.vocab_size, logits, -1e30)

@@ -1,0 +1,436 @@
+"""Composable transformer stack covering dense / MoE / SSM / hybrid /
+encoder-decoder / VLM-backbone families with scan-over-groups layers.
+
+Layers are grouped into a repeating period (hybrid interleave x MoE
+alternation); groups are stacked and scanned, keeping the HLO size constant
+in depth.  Caches are pytrees stacked over the group dim so prefill/decode
+scan over (params, cache) together.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.parallel.sharding import Px, Rules, is_px
+from .config import ModelConfig
+from . import attention as attn_mod
+from . import mamba as mamba_mod
+from . import moe as moe_mod
+from .layers import (apply_mlp, apply_norm, embed_tokens, init_embedding,
+                     init_mlp, init_norm, sinusoidal_embedding, unembed)
+
+AUX_COEF = 0.01  # MoE load-balance loss weight
+
+
+def period(cfg: ModelConfig) -> int:
+    p = cfg.attn_every if cfg.family == "hybrid" else 1
+    if cfg.n_experts:
+        p = math.lcm(p, cfg.moe_every)
+    assert cfg.n_layers % p == 0, (cfg.name, cfg.n_layers, p)
+    return p
+
+
+def _stack_px(tree):
+    """Prepend the scanned-layers role to every stacked Px leaf."""
+    return jax.tree.map(lambda p: Px(p.v, ("layers",) + p.ax), tree,
+                        is_leaf=is_px)
+
+
+# ---------------------------------------------------------------------------
+# block init
+# ---------------------------------------------------------------------------
+
+def _init_layer(key, cfg: ModelConfig, mixer: str, ffn: str,
+                decoder: bool = False):
+    ks = jax.random.split(key, 6)
+    p: Dict[str, Any] = {"norm1": init_norm(cfg)}
+    if mixer == "attn":
+        p["mixer"] = init_attention(ks[0], cfg)
+    else:
+        p["mixer"] = mamba_mod.init_mamba(ks[0], cfg)
+    if decoder:
+        p["norm_x"] = init_norm(cfg)
+        p["cross"] = init_attention(ks[1], cfg, cross=True)
+    if cfg.d_ff:
+        p["norm2"] = init_norm(cfg)
+        if ffn == "moe":
+            p["ffn"] = moe_mod.init_moe(ks[2], cfg)
+            if cfg.dense_residual:
+                p["mlp_res"] = init_mlp(ks[3], cfg)
+            if cfg.shared_expert:
+                p["mlp_shared"] = init_mlp(ks[4], cfg)
+        else:
+            p["ffn"] = init_mlp(ks[2], cfg)
+    return p
+
+
+def init_attention(key, cfg, cross=False):  # re-export for _init_layer
+    return attn_mod.init_attention(key, cfg, cross=cross)
+
+
+def _init_group(key, cfg: ModelConfig, decoder: bool = False):
+    per = period(cfg)
+    mixers = cfg.layer_kinds()[:per]
+    ffns = cfg.ffn_kinds()[:per]
+    keys = jax.random.split(key, per)
+    return {f"l{j}": _init_layer(keys[j], cfg, mixers[j], ffns[j], decoder)
+            for j in range(per)}
+
+
+def init_model(key, cfg: ModelConfig):
+    cfg.validate()
+    n_groups = cfg.n_layers // period(cfg)
+    k_emb, k_blocks, k_enc = jax.random.split(key, 3)
+    decoder = cfg.family == "encdec"
+    blocks = jax.vmap(
+        lambda k: _init_group(k, cfg, decoder=decoder)
+    )(jax.random.split(k_blocks, n_groups))
+    params = {
+        "embed": init_embedding(k_emb, cfg),
+        "blocks": _stack_px(blocks),
+        "norm_f": init_norm(cfg),
+    }
+    if decoder:
+        enc_cfg = encoder_view(cfg)
+        enc_blocks = jax.vmap(
+            lambda k: _init_group(k, enc_cfg, decoder=False)
+        )(jax.random.split(k_enc, cfg.encoder_layers))
+        params["encoder"] = {"blocks": _stack_px(enc_blocks),
+                             "norm_f": init_norm(cfg)}
+    return params
+
+
+def encoder_view(cfg: ModelConfig) -> ModelConfig:
+    """Encoder layers: same widths, non-causal attention, single-layer
+    period, no MoE."""
+    import dataclasses
+    return dataclasses.replace(cfg, family="dense", n_layers=cfg.encoder_layers,
+                               n_experts=0, attn_every=0)
+
+
+def abstract_init(cfg: ModelConfig):
+    """Parameter ShapeDtypeStructs without allocation (dry-run path)."""
+    return jax.eval_shape(lambda: init_model(jax.random.PRNGKey(0), cfg))
+
+
+def param_axes(params):
+    return jax.tree.map(lambda p: p.ax, params, is_leaf=is_px)
+
+
+def param_values(params):
+    return jax.tree.map(lambda p: p.v, params, is_leaf=is_px)
+
+
+def merge_axes(values, axes):
+    return jax.tree.map(Px, values, axes,
+                        is_leaf=lambda x: isinstance(x, tuple) and all(
+                            a is None or isinstance(a, str) for a in x))
+
+
+# ---------------------------------------------------------------------------
+# block apply
+# ---------------------------------------------------------------------------
+
+def _apply_layer(lp, x, cfg: ModelConfig, rules: Rules, positions, mixer: str,
+                 ffn_kind: str, mode: str, cache=None, enc_out=None,
+                 enc_kv=None, pos=None, causal=True):
+    """Returns (x, new_cache, aux)."""
+    aux = jnp.float32(0.0)
+    h = apply_norm(lp["norm1"], x, cfg)
+    if mixer == "attn":
+        if mode == "decode":
+            y, new_c = attn_mod.decode_attention(lp["mixer"], h, cache, pos,
+                                                 cfg, rules)
+        else:
+            y, new_c = attn_mod.self_attention(
+                lp["mixer"], h, cfg, rules, positions, causal=causal,
+                return_cache=(mode == "prefill"))
+    else:
+        if mode == "decode":
+            y, new_c = mamba_mod.decode_mamba(lp["mixer"], h, cache, cfg,
+                                              rules)
+        else:
+            y, new_c = mamba_mod.apply_mamba(
+                lp["mixer"], h, cfg, rules, return_cache=(mode == "prefill"))
+    x = x + y
+    new_enc_kv = None
+    if "cross" in lp:
+        hx = apply_norm(lp["norm_x"], x, cfg)
+        if mode == "decode":
+            yx, _ = attn_mod.decode_attention(lp["cross"], hx, enc_kv,
+                                              enc_kv.k.shape[1], cfg, rules,
+                                              cross=True)
+            new_enc_kv = enc_kv
+        else:
+            kx = jnp.einsum("bsd,dhk->bshk", enc_out, lp["cross"]["wk"])
+            vx = jnp.einsum("bsd,dhk->bshk", enc_out, lp["cross"]["wv"])
+            ekv = attn_mod.KVCache(kx, vx)
+            yx = attn_mod.cross_attention(lp["cross"], hx, ekv, cfg, rules)
+            # encoder KV is short (n_frames) -> batch-sharded, seq replicated
+            new_enc_kv = attn_mod.KVCache(
+                rules.shard(kx, "batch", None, None, None),
+                rules.shard(vx, "batch", None, None, None)
+            ) if mode == "prefill" else None
+        x = x + yx
+    if cfg.d_ff and "ffn" in lp:
+        h2 = apply_norm(lp["norm2"], x, cfg)
+        if ffn_kind == "moe":
+            # dense residual / shared expert run INSIDE the MoE shard_map
+            # so the whole FFN sublayer shares one activation psum
+            y2, aux = moe_mod.apply_moe(lp["ffn"], h2, cfg, rules,
+                                        mlp_res=lp.get("mlp_res"),
+                                        mlp_shared=lp.get("mlp_shared"))
+        else:
+            y2 = apply_mlp(lp["ffn"], h2, cfg, rules)
+        x = x + y2
+    x = rules.shard(x, "batch", "seq", None)
+    return x, new_c, new_enc_kv, aux
+
+
+def _apply_group(gp, x, cfg, rules, positions, mode, caches=None,
+                 enc_out=None, enc_kvs=None, pos=None, causal=True):
+    per = period(cfg)
+    mixers = cfg.layer_kinds()[:per]
+    ffns = cfg.ffn_kinds()[:per]
+    new_caches: Dict[str, Any] = {}
+    new_ekvs: Dict[str, Any] = {}
+    aux_total = jnp.float32(0.0)
+    for j in range(per):
+        cache_j = caches[f"l{j}"] if caches is not None else None
+        ekv_j = enc_kvs[f"l{j}"] if enc_kvs is not None else None
+        x, c, ekv, aux = _apply_layer(
+            gp[f"l{j}"], x, cfg, rules, positions, mixers[j], ffns[j], mode,
+            cache=cache_j, enc_out=enc_out, enc_kv=ekv_j, pos=pos,
+            causal=causal)
+        if c is not None:
+            new_caches[f"l{j}"] = c
+        if ekv is not None:
+            new_ekvs[f"l{j}"] = ekv
+        aux_total = aux_total + aux
+    return x, new_caches, new_ekvs, aux_total
+
+
+# ---------------------------------------------------------------------------
+# forward / prefill / decode
+# ---------------------------------------------------------------------------
+
+def _run_stack(blocks, x, cfg, rules, positions, mode, caches=None,
+               enc_out=None, enc_kvs=None, pos=None, causal=True,
+               remat=False):
+    """Scan the group stack. caches/enc_kvs are group-stacked pytrees."""
+
+    def body(carry, scanned):
+        xc, aux_acc = carry
+        gp = scanned["p"]
+        cin = scanned.get("c")
+        ekv = scanned.get("e")
+        xc, new_c, new_e, aux = _apply_group(
+            gp, xc, cfg, rules, positions, mode, caches=cin, enc_out=enc_out,
+            enc_kvs=ekv, pos=pos, causal=causal)
+        ys = {}
+        if new_c:
+            ys["c"] = new_c
+        if new_e:
+            ys["e"] = new_e
+        return (xc, aux_acc + aux), ys
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+
+    xs: Dict[str, Any] = {"p": blocks}
+    if caches is not None:
+        xs["c"] = caches
+    if enc_kvs is not None:
+        xs["e"] = enc_kvs
+
+    if not cfg.scan_layers:
+        # unrolled path (dry-run cost extraction: no while loops in HLO)
+        n_groups = jax.tree.leaves(blocks)[0].shape[0]
+        carry = (x, jnp.float32(0.0))
+        ys_list = []
+        for i in range(n_groups):
+            xs_i = jax.tree.map(lambda l: l[i], xs)
+            carry, ys_i = body(carry, xs_i)
+            ys_list.append(ys_i)
+        x, aux = carry
+        if ys_list and jax.tree.leaves(ys_list[0]):
+            ys = jax.tree.map(lambda *ls: jnp.stack(ls), *ys_list)
+        else:
+            ys = {}
+        return x, aux, ys.get("c"), ys.get("e")
+
+    (x, aux), ys = lax.scan(body, (x, jnp.float32(0.0)), xs)
+    return x, aux, ys.get("c"), ys.get("e")
+
+
+def _embed_input(params, batch, cfg: ModelConfig, rules: Rules):
+    """Token (+stub-modality) embedding; returns (x, positions, n_prefix)."""
+    tokens = batch["tokens"]
+    x = embed_tokens(params["embed"], tokens, cfg, rules)
+    n_prefix = 0
+    if cfg.family == "vlm" and "patches" in batch:
+        patches = batch["patches"].astype(x.dtype)
+        x = jnp.concatenate([patches, x], axis=1)
+        n_prefix = patches.shape[1]
+    b, s = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    if cfg.pos_embed == "learned":
+        table = params["embed"]["pos"]
+        x = x + jnp.take(table, positions[0] % table.shape[0], axis=0)[None]
+    x = rules.shard(x, "batch", "seq", None)
+    return x, positions, n_prefix
+
+
+def _encode(params, batch, cfg: ModelConfig, rules: Rules):
+    """Stub-frontend encoder pass (whisper): frames (B, F, d) -> enc_out."""
+    frames = batch["frames"].astype(cfg.jdtype())
+    b, f, _ = frames.shape
+    pe = sinusoidal_embedding(f, cfg.d_model).astype(frames.dtype)
+    x = frames + pe[None]
+    x = rules.shard(x, "batch", "seq", None)
+    positions = jnp.broadcast_to(jnp.arange(f, dtype=jnp.int32)[None], (b, f))
+    enc_cfg = encoder_view(cfg)
+    x, _, _, _ = _run_stack(params["encoder"]["blocks"], x, enc_cfg, rules,
+                            positions, "train", causal=False,
+                            remat=cfg.remat)
+    return apply_norm(params["encoder"]["norm_f"], x, enc_cfg)
+
+
+def forward(params, batch, cfg: ModelConfig, rules: Rules,
+            mode: str = "train"):
+    """Full-sequence forward. Returns (logits, aux, caches, enc_kvs)."""
+    enc_out = None
+    if cfg.family == "encdec":
+        enc_out = _encode(params, batch, cfg, rules)
+    x, positions, n_prefix = _embed_input(params, batch, cfg, rules)
+    caches = None
+    x, aux, new_caches, enc_kvs = _run_stack(
+        params["blocks"], x, cfg, rules, positions, mode, caches=caches,
+        enc_out=enc_out, remat=(cfg.remat and mode == "train"))
+    x = apply_norm(params["norm_f"], x, cfg)
+    logits = unembed(params["embed"], x, cfg, rules)
+    return logits, aux, new_caches, enc_kvs, n_prefix
+
+
+def loss_fn(params, batch, cfg: ModelConfig, rules: Rules):
+    logits, aux, _, _, n_prefix = forward(params, batch, cfg, rules, "train")
+    tokens = batch["tokens"]
+    preds = logits[:, n_prefix:, :][:, :-1]
+    targets = tokens[:, 1:]
+    logz = jax.nn.logsumexp(preds.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(
+        preds.astype(jnp.float32), targets[..., None], axis=-1)[..., 0]
+    ce = (logz - gold).mean()
+    return ce + AUX_COEF * aux, {"ce": ce, "aux": aux}
+
+
+class DecodeState(NamedTuple):
+    caches: Any           # group-stacked layer caches
+    enc_kvs: Any          # cross-attn KV (encdec) or None
+    pos: jax.Array        # scalar int32: next position to write
+
+
+def prefill(params, batch, cfg: ModelConfig, rules: Rules,
+            cache_len: Optional[int] = None):
+    """Run the prompt, build the decode state.  Returns (last_logits, state).
+
+    ``cache_len``: total KV capacity (>= prompt length); extra slots are
+    zero-filled and masked by the position check in decode_attention.
+    """
+    logits, _, caches, enc_kvs, n_prefix = forward(params, batch, cfg, rules,
+                                                   "prefill")
+    prompt_len = batch["tokens"].shape[1] + n_prefix
+    if cache_len and cache_len > prompt_len:
+        pad = cache_len - prompt_len
+
+        def pad_kv(c):
+            if isinstance(c, attn_mod.KVCache):
+                # cache leaves are group-stacked: (..., S, KV, hd); grow S
+                width = [(0, 0)] * c.k.ndim
+                width[-3] = (0, pad)
+                return attn_mod.KVCache(jnp.pad(c.k, width),
+                                        jnp.pad(c.v, width))
+            return c
+
+        caches = jax.tree.map(pad_kv, caches,
+                              is_leaf=lambda x: isinstance(
+                                  x, (attn_mod.KVCache, mamba_mod.MambaCache)))
+    state = DecodeState(caches=caches, enc_kvs=enc_kvs,
+                        pos=jnp.int32(prompt_len))
+    return logits[:, -1, :], state
+
+
+def decode_step(params, state: DecodeState, token, cfg: ModelConfig,
+                rules: Rules):
+    """token: (B,) int32 -> (logits (B, vocab), new state)."""
+    x = embed_tokens(params["embed"], token[:, None], cfg, rules)
+    if cfg.pos_embed == "learned":
+        table = params["embed"]["pos"]
+        x = x + jnp.take(table, state.pos % table.shape[0], axis=0)[None, None]
+    b = x.shape[0]
+    positions = jnp.broadcast_to(state.pos[None, None], (b, 1))
+    x, _, new_caches, _ = _run_stack(
+        params["blocks"], x, cfg, rules, positions, "decode",
+        caches=state.caches, enc_kvs=state.enc_kvs, pos=state.pos)
+    x = apply_norm(params["norm_f"], x, cfg)
+    logits = unembed(params["embed"], x, cfg, rules)[:, 0, :]
+    return logits, DecodeState(caches=new_caches, enc_kvs=state.enc_kvs,
+                               pos=state.pos + 1)
+
+
+# ---------------------------------------------------------------------------
+# abstract decode-state construction (dry-run: no allocation)
+# ---------------------------------------------------------------------------
+
+def make_decode_state(cfg: ModelConfig, batch: int, cache_len: int,
+                      dtype=None):
+    """Zero-initialised decode state with KV capacity ``cache_len``."""
+    dtype = dtype or cfg.jdtype()
+    per = period(cfg)
+    n_groups = cfg.n_layers // per
+    mixers = cfg.layer_kinds()[:per]
+
+    def stack(make):
+        one = make()
+        return jax.tree.map(
+            lambda l: jnp.broadcast_to(l[None], (n_groups,) + l.shape).copy()
+            if isinstance(l, jax.Array) else l, one)
+
+    caches = {}
+    for j in range(per):
+        if mixers[j] == "attn":
+            caches[f"l{j}"] = stack(
+                lambda: attn_mod.init_cache(cfg, batch, cache_len, dtype))
+        else:
+            caches[f"l{j}"] = stack(
+                lambda: mamba_mod.init_mamba_cache(cfg, batch, dtype))
+    enc_kvs = None
+    if cfg.family == "encdec":
+        enc_kvs = {f"l{j}": stack(
+            lambda: attn_mod.init_cache(cfg, batch, cfg.n_frames, dtype))
+            for j in range(per)}
+    return DecodeState(caches=caches, enc_kvs=enc_kvs,
+                       pos=jnp.int32(cache_len))
+
+
+def decode_state_axes(cfg: ModelConfig):
+    """Sharding roles for every leaf of the decode state."""
+    per = period(cfg)
+    mixers = cfg.layer_kinds()[:per]
+    kv_ax = attn_mod.KVCache(*[("layers",) + a for a in attn_mod.cache_axes()])
+    mb = mamba_mod.mamba_cache_axes()
+    mb_ax = mamba_mod.MambaCache(*[("layers",) + a for a in mb])
+    caches = {f"l{j}": kv_ax if mixers[j] == "attn" else mb_ax
+              for j in range(per)}
+    enc_kvs = None
+    if cfg.family == "encdec":
+        # encoder KV: short (n_frames, not a multiple of tp) -> replicate seq
+        enc_ax = ("layers", "batch", None, None, None)
+        enc_kvs = {f"l{j}": attn_mod.KVCache(enc_ax, enc_ax)
+                   for j in range(per)}
+    return DecodeState(caches=caches, enc_kvs=enc_kvs, pos=())

@@ -1,0 +1,2 @@
+from . import adamw, compression, spectral
+from .adamw import AdamWConfig, OptState

@@ -1,0 +1,164 @@
+"""AdamW, implemented raw (no optax), with ZeRO-sharded moments.
+
+Moments inherit the parameter sharding (which already includes the FSDP
+"data"-axis shard), so optimizer state is fully partitioned -- ZeRO-1/3
+hybrid.  Moment dtype is configurable:
+
+  float32  -- exact (default)
+  bfloat16 -- halves optimizer HBM (enables 400B+ training on one v5e pod)
+  int8     -- block-quantised moments (dynamic per-block scale), the
+              memory-optimised mode recorded in EXPERIMENTS §Perf
+
+The int8 mode stores (q, scale) per moment with per-row blocks; quantisation
+error feeds back through the running average (no error accumulator needed
+for moments, unlike gradient compression).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    moment_dtype: str = "float32"   # float32 | bfloat16 | int8
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+class OptState(NamedTuple):
+    m: Any
+    v: Any
+    count: jax.Array
+
+
+_QBLOCK = 128  # int8 block size (last-dim blocks)
+
+
+def _quantize(x):
+    shape = x.shape
+    last = shape[-1]
+    pad = (-last) % _QBLOCK
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    xb = x.reshape(x.shape[:-1] + (-1, _QBLOCK))
+    scale = jnp.max(jnp.abs(xb), axis=-1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-20)
+    q = jnp.clip(jnp.round(xb / scale), -127, 127).astype(jnp.int8)
+    return {"q": q, "s": scale.astype(jnp.float32)}
+
+
+def _dequantize(qs, shape):
+    x = qs["q"].astype(jnp.float32) * qs["s"]
+    x = x.reshape(x.shape[:-2] + (-1,))
+    return x[..., : shape[-1]]
+
+
+def _moment_like(p, dtype: str, which: str):
+    # int8 mode quantises only v (positive, slowly varying); m -- whose
+    # entries change sign step to step -- stays bf16 (absmax-int8 m was
+    # measured to destabilise small-model training; see tests)
+    if dtype == "int8":
+        if which == "v":
+            return _quantize(jnp.zeros(p.shape, jnp.float32))
+        return jnp.zeros(p.shape, jnp.bfloat16)
+    dt = jnp.bfloat16 if dtype == "bfloat16" else jnp.float32
+    return jnp.zeros(p.shape, dt)
+
+
+def init(params, cfg: AdamWConfig) -> OptState:
+    return OptState(
+        m=jax.tree.map(lambda p: _moment_like(p, cfg.moment_dtype, "m"),
+                       params),
+        v=jax.tree.map(lambda p: _moment_like(p, cfg.moment_dtype, "v"),
+                       params),
+        count=jnp.zeros((), jnp.int32))
+
+
+def lr_schedule(cfg: AdamWConfig, step):
+    """Linear warmup -> cosine decay to min_lr_ratio."""
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.decay_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (
+        1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * jnp.minimum(warm, cos)
+
+
+def global_norm(tree):
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def update(grads, state: OptState, params, cfg: AdamWConfig
+           ) -> Tuple[Any, OptState, dict]:
+    count = state.count + 1
+    lr = lr_schedule(cfg, count)
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+
+    def read_moment(mom, p, which):
+        if cfg.moment_dtype == "int8" and which == "v":
+            r = _dequantize(mom, p.shape)   # stores sqrt(v): halve the
+            return r * r                    # dynamic range so small entries
+        return mom.astype(jnp.float32)      # keep quanta (no m/eps blowups)
+
+    def write_moment(x, which):
+        if cfg.moment_dtype == "int8":
+            if which == "v":
+                return _quantize(jnp.sqrt(jnp.maximum(x, 0.0)))
+            return x.astype(jnp.bfloat16)
+        dt = jnp.bfloat16 if cfg.moment_dtype == "bfloat16" else jnp.float32
+        return x.astype(dt)
+
+    b1c = 1 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** count.astype(jnp.float32)
+
+    def one(p, g, m, v):
+        g = g.astype(jnp.float32) * clip
+        mf = cfg.b1 * read_moment(m, p, "m") + (1 - cfg.b1) * g
+        vf = cfg.b2 * read_moment(v, p, "v") + (1 - cfg.b2) * g * g
+        upd = (mf / b1c) / (jnp.sqrt(vf / b2c) + cfg.eps)
+        newp = (p.astype(jnp.float32) - lr * (upd + cfg.weight_decay
+                                              * p.astype(jnp.float32)))
+        return (newp.astype(p.dtype), write_moment(mf, "m"),
+                write_moment(vf, "v"))
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    out = [one(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, OptState(new_m, new_v, count), {
+        "grad_norm": gnorm, "lr": lr}
+
+
+def moment_axes(param_axes_tree, cfg: AdamWConfig, which: str = "v"):
+    """Sharding roles for a moment tree (mirrors the params; int8 v adds
+    the block-scale leaves)."""
+    if cfg.moment_dtype != "int8" or which == "m":
+        return param_axes_tree
+
+    def expand(ax):
+        ax = tuple(ax)
+        return {"q": ax + (None,), "s": ax + (None,)}
+
+    from repro.parallel.sharding import is_axes
+    return jax.tree.map(expand, param_axes_tree, is_leaf=is_axes)

@@ -1,0 +1,77 @@
+"""Spectral training telemetry: per-parameter gradient-covariance spectra
+via the MANOJAVAM Jacobi engine (DESIGN.md Sec. 3, item 4).
+
+For a 2-D (or folded) gradient G (m, n), the right Gram matrix G^T G is
+eigendecomposed on a random sketch of rows (keeps the problem <= probe
+dim), giving the EVCR curve of the gradient covariance -- a live view of
+how low-rank the optimization signal is.  This is the diagnostic behind
+choosing the PCA gradient-compression rank: if the top-r EVCR mass is
+~1, rank-r compression is near-lossless.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.jacobi import jacobi_eigh
+from repro.core.pca import evcr_cvcr
+
+
+@dataclasses.dataclass(frozen=True)
+class SpectralConfig:
+    probe_dim: int = 32     # sketch size (Jacobi problem is probe x probe)
+    sweeps: int = 10
+    min_size: int = 65536
+
+
+def gradient_spectrum(g, cfg: SpectralConfig = SpectralConfig(), key=None):
+    """EVCR of the gradient covariance of one parameter tensor.
+
+    Returns (eigenvalues, evcr, cvcr) of the sketched Gram, descending.
+    """
+    g2 = g.reshape(-1, g.shape[-1]).astype(jnp.float32)
+    m, n = g2.shape
+    k = min(cfg.probe_dim, n)
+    if n > k:
+        key = key if key is not None else jax.random.PRNGKey(0)
+        sketch = jax.random.normal(key, (n, k), jnp.float32) / jnp.sqrt(n)
+        gs = g2 @ sketch                      # (m, k)
+    else:
+        gs = g2
+    gram = gs.T @ gs                          # (k, k)
+    res = jacobi_eigh(gram, sweeps=cfg.sweeps, pivot="parallel")
+    evcr, cvcr = evcr_cvcr(res.eigenvalues)
+    return res.eigenvalues, evcr, cvcr
+
+
+def tree_spectra(grads, cfg: SpectralConfig = SpectralConfig(),
+                 key=None) -> Dict[str, Dict[str, jnp.ndarray]]:
+    """Spectra for every >=2-D parameter above the size threshold.
+    Returns {param_path: {eigenvalues, evcr, cvcr, effective_rank}}."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    flat, _ = jax.tree_util.tree_flatten_with_path(grads)
+    out = {}
+    for i, (path, g) in enumerate(flat):
+        if g.ndim < 2 or g.size < cfg.min_size:
+            continue
+        name = jax.tree_util.keystr(path)
+        lam, evcr, cvcr = gradient_spectrum(
+            g, cfg, jax.random.fold_in(key, i))
+        # entropy-based effective rank
+        p = jnp.maximum(evcr, 1e-12)
+        eff = jnp.exp(-jnp.sum(p * jnp.log(p)))
+        out[name] = {"eigenvalues": lam, "evcr": evcr, "cvcr": cvcr,
+                     "effective_rank": eff}
+    return out
+
+
+def suggest_compression_rank(spectra: Dict, coverage: float = 0.9) -> int:
+    """Smallest rank whose mean CVCR across parameters reaches coverage."""
+    if not spectra:
+        return 0
+    cvcrs = jnp.stack([s["cvcr"] for s in spectra.values()])
+    mean_cvcr = cvcrs.mean(0)
+    return int(jnp.argmax(mean_cvcr >= coverage)) + 1

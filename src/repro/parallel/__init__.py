@@ -1,0 +1,5 @@
+from .sharding import (Px, REPLICATED, Rules, is_px, pad_to_multiple,
+                       rules_for_mesh, split_tree, stack_axes)
+
+__all__ = ["Px", "REPLICATED", "Rules", "is_px", "pad_to_multiple",
+           "rules_for_mesh", "split_tree", "stack_axes"]

@@ -1,0 +1,2 @@
+from .elastic import pick_mesh, resume_or_init
+from .watchdog import STALL_EXIT_CODE, Watchdog

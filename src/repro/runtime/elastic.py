@@ -1,0 +1,42 @@
+"""Elastic restart: resume training on whatever mesh is currently healthy.
+
+Checkpoints store *logical* (global) arrays, so resuming only needs a new
+sharding tree for the new mesh -- ``checkpointer.restore`` device_puts each
+leaf onto it.  ``pick_mesh`` chooses the largest (data x model) grid the
+surviving device set supports with model-dim divisibility constraints, and
+``resume_or_init`` wires it together.  Data-pipeline cursors live in
+checkpoint metadata, so no examples are skipped or repeated on restart.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+from repro.checkpoint import checkpointer
+
+
+def pick_mesh(model_parallel: int, devices=None):
+    """Largest (data, model) mesh over the available devices."""
+    devices = devices if devices is not None else jax.devices()
+    n = len(devices)
+    tp = model_parallel
+    while tp > 1 and (n % tp or model_parallel % tp):
+        tp -= 1
+    dp = n // tp
+    return jax.make_mesh((dp, tp), ("data", "model"),
+                         devices=devices[: dp * tp])
+
+
+def resume_or_init(ckpt_dir, state_like, shardings, init_fn,
+                   step: Optional[int] = None):
+    """Restore the latest checkpoint onto the current mesh, or initialise.
+
+    Returns (state, metadata, resumed: bool).
+    """
+    latest = checkpointer.latest_step(ckpt_dir)
+    if latest is None:
+        return init_fn(), {}, False
+    state, meta = checkpointer.restore(ckpt_dir, state_like, step=step,
+                                       shardings=shardings)
+    return state, meta, True

@@ -1,0 +1,15 @@
+"""Test-session guards.
+
+The dry-run isolation contract: ONLY repro.launch.dryrun (and the other
+launch-time scripts) force a 512-device host platform; smoke tests and
+benches must see the single real device.  Multi-device tests run in
+subprocesses (tests/test_distributed.py) that set XLA_FLAGS themselves.
+"""
+import os
+
+
+def pytest_sessionstart(session):
+    flags = os.environ.get("XLA_FLAGS", "")
+    assert "xla_force_host_platform_device_count" not in flags, (
+        "tests must run with the default (single) device; multi-device "
+        "tests spawn their own subprocesses")

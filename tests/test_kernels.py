@@ -1,0 +1,136 @@
+"""Per-kernel allclose validation against the pure-jnp oracles (ref.py),
+sweeping shapes and dtypes, in interpret mode (CPU)."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("m,k,n", [(64, 64, 64), (130, 70, 150),
+                                   (1, 257, 33), (128, 128, 384)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_mm_engine(m, k, n, dtype):
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.standard_normal((m, k)), dtype)
+    b = jnp.asarray(rng.standard_normal((k, n)), dtype)
+    out = ops.mm_engine_matmul(a, b, block=64)
+    want = ref.mm_engine(a, b)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("n,tile", [(64, 32), (100, 32), (256, 128),
+                                    (33, 16)])
+def test_dle_scan(n, tile):
+    rng = np.random.default_rng(n)
+    c = rng.standard_normal((n, n)).astype(np.float32)
+    c = c + c.T
+    piv = ops.dle_find_pivot(jnp.asarray(c), tile=tile)
+    val, idx = ref.dle_scan(jnp.asarray(c))
+    assert abs(float(jnp.abs(piv.apq)) - float(val)) < 1e-6
+    # the pivot must be the true max off-diagonal element
+    mask = np.abs(c) * (1 - np.eye(n))
+    assert np.isclose(np.abs(c[int(piv.p), int(piv.q)]), mask.max())
+    assert int(piv.p) != int(piv.q)
+
+
+@pytest.mark.parametrize("k", [1, 5, 64, 300])
+def test_cordic_kernel(k):
+    rng = np.random.default_rng(k)
+    apq = jnp.asarray(rng.uniform(-3, 3, k), jnp.float32)
+    app = jnp.asarray(rng.uniform(-3, 3, k), jnp.float32)
+    aqq = jnp.asarray(rng.uniform(-3, 3, k), jnp.float32)
+    th, c, s = ops.cordic_rotation_params(apq, app, aqq, block=64)
+    th_r, c_r, s_r = ref.cordic_rotation_params(apq, app, aqq)
+    np.testing.assert_allclose(np.asarray(th), np.asarray(th_r), atol=3e-7)
+    np.testing.assert_allclose(np.asarray(c), np.asarray(c_r), atol=3e-7)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_r), atol=3e-7)
+    # rotation must zero the pivot: apq' = sc(app-aqq) + (c^2-s^2)apq
+    apq2 = (np.asarray(s) * np.asarray(c) * (np.asarray(app - aqq))
+            + (np.asarray(c) ** 2 - np.asarray(s) ** 2) * np.asarray(apq))
+    np.testing.assert_allclose(apq2, 0.0, atol=1e-5)
+
+
+@pytest.mark.parametrize("bh,sq,skv,d", [(2, 64, 64, 32), (4, 96, 96, 64),
+                                         (1, 128, 256, 64)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention(bh, sq, skv, d, causal):
+    if causal and sq != skv and skv % 32:
+        pytest.skip("padding requires causal")
+    rng = np.random.default_rng(bh * sq)
+    q = jnp.asarray(rng.standard_normal((bh, sq, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((bh, skv, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((bh, skv, d)), jnp.float32)
+    off = skv - sq if causal else 0
+    out = ops.flash_attention(q, k, v, causal=causal, block_q=32, block_k=32,
+                              q_offset=off)
+    want = ref.flash_attention(q, k, v, causal=causal, q_offset=off)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)
+
+
+@pytest.mark.parametrize("b,l,d,n,chunk", [(2, 50, 16, 8, 16),
+                                           (1, 128, 32, 16, 32),
+                                           (3, 33, 8, 4, 8)])
+def test_mamba_scan(b, l, d, n, chunk):
+    rng = np.random.default_rng(l)
+    u = jnp.asarray(rng.standard_normal((b, l, d)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.2, (b, l, d)), jnp.float32)
+    A = jnp.asarray(-rng.uniform(0.5, 2, (d, n)), jnp.float32)
+    B = jnp.asarray(rng.standard_normal((b, l, n)), jnp.float32)
+    C = jnp.asarray(rng.standard_normal((b, l, n)), jnp.float32)
+    D = jnp.asarray(rng.standard_normal((d,)), jnp.float32)
+    y = ops.mamba_scan(u, dt, A, B, C, D, chunk=chunk)
+    want = ref.mamba_scan(u, dt, A, B, C, D)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_mm_engine_is_blocked_covariance_backend():
+    """The unified-datapath property: covariance through the mm_engine
+    matches the jnp oracle."""
+    from repro.core import blocked_covariance
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.standard_normal((300, 96)), jnp.float32)
+    c_pallas = blocked_covariance(
+        x, block_m=64,
+        matmul_fn=lambda a, b: ops.mm_engine_matmul(a, b, block=32))
+    c_ref = np.asarray(x).T @ np.asarray(x)
+    np.testing.assert_allclose(np.asarray(c_pallas), c_ref, rtol=2e-4,
+                               atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis sweeps
+# ---------------------------------------------------------------------------
+from hypothesis import given, settings, strategies as st
+
+
+@settings(max_examples=12, deadline=None)
+@given(m=st.integers(1, 200), k=st.integers(1, 200), n=st.integers(1, 200),
+       seed=st.integers(0, 2 ** 16))
+def test_property_mm_engine_any_shape(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((k, n)), jnp.float32)
+    out = ops.mm_engine_matmul(a, b, block=64)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(a) @ np.asarray(b),
+                               rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(2, 120), tile=st.sampled_from([16, 32, 64]),
+       seed=st.integers(0, 2 ** 16))
+def test_property_dle_always_finds_max(n, tile, seed):
+    rng = np.random.default_rng(seed)
+    c = rng.standard_normal((n, n)).astype(np.float32)
+    c = c + c.T
+    piv = ops.dle_find_pivot(jnp.asarray(c), tile=tile)
+    mask = np.abs(c) * (1 - np.eye(n))
+    assert np.isclose(np.abs(c[int(piv.p), int(piv.q)]), mask.max(),
+                      rtol=1e-6)
+    assert int(piv.p) != int(piv.q)

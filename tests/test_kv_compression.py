@@ -1,0 +1,49 @@
+"""Beyond-paper KV-cache PCA compression: exactness in the retained
+subspace, error bounds for low-rank caches, rank suggestion."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.models import kv_compression as kvc
+
+
+def _lowrank_cache(b, s, kv, hd, r_true, seed=0, noise=0.0):
+    rng = np.random.default_rng(seed)
+    basis = rng.standard_normal((kv, hd, r_true)).astype(np.float32)
+    coef = rng.standard_normal((b, s, kv, r_true)).astype(np.float32)
+    x = np.einsum("bskr,kdr->bskd", coef, basis)
+    if noise:
+        x = x + noise * rng.standard_normal(x.shape).astype(np.float32)
+    return jnp.asarray(x)
+
+
+def test_exact_for_truly_lowrank_cache():
+    k = _lowrank_cache(2, 64, 4, 32, r_true=6, seed=1)
+    v = _lowrank_cache(2, 64, 4, 32, r_true=6, seed=2)
+    q = jnp.asarray(np.random.default_rng(3).standard_normal((2, 4, 2, 32)),
+                    jnp.float32)
+    err, ratio = kvc.attention_error(q, k, v,
+                                     kvc.KVCompressionConfig(rank=8), 0.18)
+    assert float(err) < 1e-3
+    assert ratio == 8 / 32
+
+
+def test_error_decreases_with_rank():
+    k = _lowrank_cache(1, 96, 2, 32, r_true=12, seed=4, noise=0.05)
+    v = _lowrank_cache(1, 96, 2, 32, r_true=12, seed=5, noise=0.05)
+    q = jnp.asarray(np.random.default_rng(6).standard_normal((1, 2, 3, 32)),
+                    jnp.float32)
+    errs = []
+    for r in (2, 8, 16, 32):
+        e, _ = kvc.attention_error(q, k, v,
+                                   kvc.KVCompressionConfig(rank=r), 0.18)
+        errs.append(float(e))
+    assert errs[-1] < 1e-3              # full rank = exact
+    assert all(b <= a + 1e-6 for a, b in zip(errs, errs[1:]))
+
+
+def test_suggest_rank_finds_true_rank():
+    k = _lowrank_cache(2, 128, 3, 32, r_true=5, seed=7)
+    r = kvc.suggest_rank(k, coverage=0.999)
+    assert 4 <= r <= 7

@@ -1,0 +1,94 @@
+"""PCA pipeline: correctness vs numpy, EVCR/CVCR properties, selection,
+projection variance, paper-faithful (DLE+CORDIC+MM-engine) configuration."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (PCAConfig, covariance, evcr_cvcr, find_pivot,
+                        find_pivot_tilewise, fit, fit_transform, select_k,
+                        standardize, transform)
+
+
+def _data(m=200, d=16, seed=0):
+    rng = np.random.default_rng(seed)
+    # correlated features -> meaningful spectrum
+    base = rng.standard_normal((m, 4))
+    mix = rng.standard_normal((4, d))
+    return (base @ mix + 0.1 * rng.standard_normal((m, d))).astype(np.float32)
+
+
+def test_pca_matches_numpy_eigh():
+    x = _data()
+    res = fit(x, PCAConfig(T=32, sweeps=15))
+    xs, _, _ = standardize(jnp.asarray(x))
+    ref_w = np.linalg.eigh(np.asarray(covariance(xs)))[0][::-1]
+    np.testing.assert_allclose(np.asarray(res.eigenvalues), ref_w,
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_paper_faithful_configuration():
+    """pivot='paper' (DLE max-pivot) + CORDIC angles + matmul rotations
+    through the MM-Engine: the full unified datapath."""
+    x = _data(m=120, d=10, seed=3)
+    res = fit(x, PCAConfig(T=16, sweeps=40, pivot="paper", rotation="matmul",
+                           angle="cordic"))
+    xs, _, _ = standardize(jnp.asarray(x))
+    ref_w = np.linalg.eigh(np.asarray(covariance(xs)))[0][::-1]
+    np.testing.assert_allclose(np.asarray(res.eigenvalues), ref_w,
+                               rtol=1e-3, atol=1e-2)
+
+
+def test_projection_variance_equals_topk_eigenvalues():
+    x = _data(seed=5)
+    out, res = fit_transform(x, k=4, config=PCAConfig(T=32, sweeps=15))
+    proj_var = np.var(np.asarray(out), axis=0, ddof=0) * x.shape[0]
+    np.testing.assert_allclose(np.sort(proj_var)[::-1],
+                               np.asarray(res.eigenvalues[:4]),
+                               rtol=1e-3)
+
+
+def test_evcr_cvcr_and_selection():
+    lam = jnp.asarray([5.0, 3.0, 1.0, 0.5, 0.5])
+    evcr, cvcr = evcr_cvcr(lam)
+    np.testing.assert_allclose(float(evcr.sum()), 1.0, rtol=1e-6)
+    assert np.all(np.diff(np.asarray(cvcr)) >= -1e-7)
+    assert float(cvcr[-1]) == pytest.approx(1.0, rel=1e-6)
+    assert int(select_k(cvcr, 0.8)) == 2
+    assert int(select_k(cvcr, 0.95)) == 4
+
+
+def test_transform_shape_and_centering():
+    x = _data(seed=6)
+    res = fit(x, PCAConfig(T=32, sweeps=15))
+    out = transform(x, res, k=3)
+    assert out.shape == (x.shape[0], 3)
+    np.testing.assert_allclose(np.asarray(out).mean(0), 0.0, atol=1e-3)
+
+
+def test_dle_tilewise_matches_flat():
+    rng = np.random.default_rng(11)
+    for n, t in ((32, 8), (50, 16), (64, 64)):
+        c = rng.standard_normal((n, n)).astype(np.float32)
+        c = c + c.T
+        a = find_pivot(jnp.asarray(c))
+        b = find_pivot_tilewise(jnp.asarray(c), t)
+        assert abs(float(a.apq)) == pytest.approx(abs(float(b.apq)))
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=st.integers(20, 100), d=st.integers(2, 12),
+       seed=st.integers(0, 1000))
+def test_property_pca(m, d, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((m, d)).astype(np.float32)
+    res = fit(x, PCAConfig(T=16, sweeps=12))
+    w = np.asarray(res.eigenvalues)
+    # PSD covariance -> non-negative eigenvalues (numerical floor)
+    assert w.min() > -1e-2
+    # total variance of standardized data = d * m (X^T X convention)
+    np.testing.assert_allclose(w.sum(), d * m, rtol=1e-2)
+    evcr = np.asarray(res.evcr)
+    assert abs(evcr.sum() - 1.0) < 1e-4
+    v = np.asarray(res.components)
+    np.testing.assert_allclose(v.T @ v, np.eye(d), atol=1e-3)
