@@ -1,12 +1,16 @@
 """Shared benchmark utilities: timing, the paper's dataset suite
-(Table IV), CSV emission."""
+(Table IV), CSV emission, machine-readable JSON trajectory files."""
 from __future__ import annotations
 
+import json
+import pathlib
 import time
 from typing import Callable, Dict, Tuple
 
 import numpy as np
 import jax
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
 
 # Paper Table IV: (records M, features N) per benchmark dataset.  No
 # network access in this container, so measured runs use synthetic
@@ -56,3 +60,13 @@ def time_call(fn: Callable, *args, reps: int = 3, warmup: int = 1) -> float:
 
 def emit(name: str, us_per_call, derived=""):
     print(f"{name},{us_per_call},{derived}", flush=True)
+
+
+def emit_json(name: str, payload: Dict) -> pathlib.Path:
+    """Write a machine-readable result file ``BENCH_<name>.json`` at the
+    repo root so the perf trajectory accumulates across PRs.  ``payload``
+    should be a dict of plain scalars/lists (rows keyed like the CSV)."""
+    path = REPO_ROOT / f"BENCH_{name}.json"
+    doc = {"benchmark": name, "timestamp_s": time.time(), **payload}
+    path.write_text(json.dumps(doc, indent=2, sort_keys=True) + "\n")
+    return path

@@ -8,6 +8,7 @@ Prints ``name,us_per_call,derived`` CSV.
   dse   -- T/S design-space exploration (paper Figs. 9-11)
   table3-- resource/config comparison (paper Tables I-III)
   roofline -- (arch x shape) roofline terms from the dry-run records
+  serve -- batched multi-tenant serving throughput (repro.serving)
 """
 import argparse
 import sys
@@ -23,7 +24,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import (dse, fig1_bottlenecks, fig6_exec_time, fig7_energy,
-                   fig8_frobenius, perf_variants, roofline, table3_configs)
+                   fig8_frobenius, perf_variants, roofline, serve_throughput,
+                   table3_configs)
     suite = {
         "table3": table3_configs,
         "fig8": fig8_frobenius,
@@ -33,6 +35,7 @@ def main() -> None:
         "dse": dse,
         "roofline": roofline,
         "perf": perf_variants,
+        "serve": serve_throughput,
     }
     only = set(args.only.split(",")) if args.only else None
     print("name,us_per_call,derived")

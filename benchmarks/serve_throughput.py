@@ -1,0 +1,83 @@
+"""Serving throughput: batched multi-tenant engine vs one-at-a-time baseline.
+
+Sweeps (T, S, bucket policy) over a fixed mixed-shape eigh request stream and
+reports requests/s plus p50/p99 service latency.  The S=1 row is the
+serve-one-at-a-time baseline (every request its own dispatch); batched rows
+must clear >2x its requests/s to demonstrate the S-array axis paying off in
+software.  Also emits ``BENCH_serve_throughput.json`` for the perf
+trajectory.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import PCAConfig
+from repro.launch.serve_pca import mixed_traffic
+from repro.serving import BucketPolicy, PCAServer
+
+from .common import emit, emit_json
+
+MIXED_DIMS = (10, 14, 18, 24, 29, 31, 37, 46)
+
+
+def _measure(mats, T: int, S: int, mode: str, sweeps: int = 10):
+    srv = PCAServer(PCAConfig(T=T, S=S, sweeps=sweeps),
+                    policy=BucketPolicy(T=T, mode=mode), max_delay_s=10.0)
+    srv.solve_many(mats)            # warmup: compile every bucket executable
+    srv.stats.reset()
+    t0 = time.perf_counter()
+    srv.solve_many(mats)
+    wall = time.perf_counter() - t0
+    s = srv.stats.summary()
+    return {
+        "T": T, "S": S, "policy": mode,
+        "wall_s": wall,
+        "requests_per_s": len(mats) / wall,
+        "us_per_request": wall / len(mats) * 1e6,
+        "latency_p50_ms": s["latency_p50_ms"],
+        "latency_p99_ms": s["latency_p99_ms"],
+        "mean_padding_waste": s["mean_padding_waste"],
+        "mean_batch": s["mean_batch"],
+        "cache_hit_rate": s["cache_hit_rate"],
+    }
+
+
+def run(fast: bool = True) -> None:
+    n_req = 32 if fast else 128
+    mats = mixed_traffic(n_req, "eigh", MIXED_DIMS)
+    grid = [(16, 1, "tile"),            # serve-one-at-a-time baseline
+            (16, 4, "tile"), (16, 8, "tile"),
+            (16, 4, "pow2"), (16, 8, "pow2")]
+    if not fast:
+        grid += [(32, 4, "tile"), (32, 8, "tile"), (32, 8, "pow2")]
+
+    rows = []
+    baseline_rps = None
+    for T, S, mode in grid:
+        row = _measure(mats, T, S, mode)
+        if S == 1:
+            baseline_rps = row["requests_per_s"]
+        row["speedup_vs_serial"] = (row["requests_per_s"] / baseline_rps
+                                    if baseline_rps else float("nan"))
+        rows.append(row)
+        emit(f"serve_T{T}_S{S}_{mode}", f"{row['us_per_request']:.1f}",
+             f"rps={row['requests_per_s']:.1f}"
+             f";p50_ms={row['latency_p50_ms']:.2f}"
+             f";p99_ms={row['latency_p99_ms']:.2f}"
+             f";waste={row['mean_padding_waste']:.3f}"
+             f";speedup={row['speedup_vs_serial']:.2f}")
+
+    best = max(r["speedup_vs_serial"] for r in rows if r["S"] >= 4)
+    emit("serve_best_batched_speedup", f"{best:.2f}",
+         "acceptance: >2x vs serve-one-at-a-time")
+    emit_json("serve_throughput", {
+        "n_requests": n_req,
+        "mixed_dims": list(MIXED_DIMS),
+        "baseline_requests_per_s": baseline_rps,
+        "best_batched_speedup": best,
+        "rows": rows,
+    })
+
+
+if __name__ == "__main__":
+    run(fast=True)

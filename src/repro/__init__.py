@@ -4,6 +4,7 @@ A multi-pod JAX framework built around the paper's unified
 matmul + Jacobi-SVD engine:
 
   repro.core       the PCA accelerator (covariance / Jacobi / CORDIC / DLE)
+  repro.serving    batched multi-tenant PCA/SVD serving (buckets + S-batches)
   repro.kernels    Pallas TPU kernels (+ jit wrappers and jnp oracles)
   repro.models     dense / MoE / SSM / hybrid / enc-dec / VLM stack
   repro.configs    the ten assigned architectures and shape cells

@@ -88,13 +88,38 @@ def cyclic_pairs(n: int) -> np.ndarray:
 
 
 def _build_rotation(n: int, p, q, c, s, dtype):
-    """Dense block-rotation J (identity + embedded 2x2s, paper eq. 7)."""
+    """Dense block-rotation J (identity + embedded 2x2s, paper eq. 7).
+
+    Degenerate pivots with p == q (the DLE's answer on an already-diagonal
+    matrix) carry c = 1, s = 0 from ``_null_pivot_guard``; route the
+    off-diagonal writes through ``where`` so they land on the diagonal as c
+    instead of zeroing it.
+    """
     J = jnp.eye(n, dtype=dtype)
     J = J.at[p, p].set(c.astype(dtype))
     J = J.at[q, q].set(c.astype(dtype))
-    J = J.at[p, q].set(s.astype(dtype))
-    J = J.at[q, p].set((-s).astype(dtype))
+    J = J.at[p, q].set(jnp.where(p == q, c, s).astype(dtype))
+    J = J.at[q, p].set(jnp.where(p == q, c, -s).astype(dtype))
     return J
+
+
+def _null_pivot_guard(p, q, apq, c, s):
+    """Force the exact identity rotation on null pivots.
+
+    Two cases: (a) apq == 0 -- nothing to annihilate.  The float angle
+    formulas already return s = 0 here, but atan2/CORDIC do not (atan2(0, x)
+    is pi for x < 0; the fixed-point CORDIC leaves ~2^-29 angle noise), so
+    without the guard a zero-padded coordinate could mix with live ones.
+    This is what makes bucket padding *exact*: a matrix embedded in a larger
+    zero-padded bucket keeps its padded rows/cols at exactly zero through
+    every sweep, for every pivot strategy and angle mode.  (b) p == q -- the
+    max-pivot DLE degenerates to argmax index 0 on an all-zero off-diagonal;
+    rotating "coordinate p against itself" must be a no-op.
+    """
+    null = (apq == 0.0) | (p == q)
+    c = jnp.where(null, jnp.ones_like(c), c)
+    s = jnp.where(null, jnp.zeros_like(s), s)
+    return c, s
 
 
 def _apply_rotations_rowcol(C, V, p, q, c, s):
@@ -139,6 +164,7 @@ def _sweep_scan(C, V, rounds, angle_fn, rotation, matmul_fn):
         app = C[p, p]
         aqq = C[q, q]
         _, c, s = angle_fn(apq, app, aqq)
+        c, s = _null_pivot_guard(p, q, apq, c, s)
         c = c.astype(C.dtype)
         s = s.astype(C.dtype)
         if rotation == "rowcol":
@@ -159,6 +185,7 @@ def _max_pivot_sweep(C, V, n_rot: int, angle_fn, rotation, matmul_fn,
         C, V = carry
         piv = pivot_fn(C)
         _, c, s = angle_fn(piv.apq, piv.app, piv.aqq)
+        c, s = _null_pivot_guard(piv.p, piv.q, piv.apq, c, s)
         c = c.astype(C.dtype)
         s = s.astype(C.dtype)
         p = piv.p[None]
@@ -277,14 +304,20 @@ def jacobi_eigh(
     return EighResult(eigvals, V, off, history)
 
 
-def jacobi_svd(A, **kwargs):
+def jacobi_svd(A, matmul_fn: Optional[Callable] = None, **kwargs):
     """SVD of A via eigendecomposition of the Gram matrix A^T A (the PCA
     path: singular values = sqrt(eigenvalues), V = right singular vectors).
-    Returns (U, S, Vt) with the thin convention."""
-    gram = A.T @ A
-    res = jacobi_eigh(gram, **kwargs)
+    Returns (U, S, Vt) with the thin convention.
+
+    The Gram product and the U = A V back-projection go through the same
+    injected ``matmul_fn`` as the rotations: all three matmuls of the SVD
+    share the unified MM-Engine datapath (paper Sec. VI-A).
+    """
+    mm = matmul_fn or jnp.matmul
+    gram = mm(A.T, A)
+    res = jacobi_eigh(gram, matmul_fn=matmul_fn, **kwargs)
     s = jnp.sqrt(jnp.maximum(res.eigenvalues, 0.0))
     V = res.eigenvectors
     safe = jnp.maximum(s, 1e-30)
-    U = (A @ V) / safe[None, :]
+    U = mm(A, V) / safe[None, :]
     return U, s, V.T

@@ -1,0 +1,25 @@
+"""repro.serving -- batched multi-tenant PCA/SVD serving.
+
+The paper's S-arrays-plus-Matrix-Padding-Unit scalability story as a service:
+heterogeneous requests are padded into T-multiple shape buckets
+(``batching``), up to S same-bucket requests stack into one vmapped device
+batch (``solver``), and ``engine.PCAServer`` runs the queue with
+deadline-aware microbatching, a compiled-executable cache, and full
+telemetry (``stats``).
+"""
+from .batching import (BucketPolicy, POLICIES, pad_to_bucket, padding_waste,
+                       stack_requests)
+from .engine import (OPS, PCAServer, ServedEigh, ServedPCA, ServedSVD, Ticket)
+from .solver import (BatchedEighResult, BatchedPCAResult, BatchedSVDResult,
+                     jacobi_eigh_batched, jacobi_svd_batched, pca_fit_batched,
+                     pca_transform_batched)
+from .stats import RequestRecord, ServingStats, percentile
+
+__all__ = [
+    "BatchedEighResult", "BatchedPCAResult", "BatchedSVDResult",
+    "BucketPolicy", "OPS", "PCAServer", "POLICIES", "RequestRecord",
+    "ServedEigh", "ServedPCA", "ServedSVD", "ServingStats", "Ticket",
+    "jacobi_eigh_batched", "jacobi_svd_batched", "pad_to_bucket",
+    "padding_waste", "pca_fit_batched", "pca_transform_batched",
+    "percentile", "stack_requests",
+]

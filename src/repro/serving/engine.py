@@ -1,0 +1,257 @@
+"""PCAServer: deadline-aware microbatching over shape-bucketed traffic.
+
+The serving loop is the software image of the paper's fabric: the Matrix
+Padding Unit (``batching``) normalizes heterogeneous requests into T-multiple
+buckets, and the S-array axis (``solver``) retires up to S same-bucket
+requests per dispatch.  Requests queue per (op, bucket); a queue flushes when
+it reaches S (full microbatch) or when its oldest request's deadline expires
+(``poll``).  Each (op, bucket, batch) triple maps to one jitted executable
+held in an explicit cache -- with ``pad_batches=True`` partial flushes are
+zero-padded up to S so steady-state traffic runs entirely on cached
+executables and never recompiles.
+
+The engine is synchronous and clock-injectable: callers drive time via
+``submit``/``poll``/``drain``, which makes deadline behavior deterministic
+under test and keeps the design open for an async device-stream front-end
+(see ROADMAP follow-ons).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.pca import PCAConfig
+from .batching import BucketPolicy, padding_waste, stack_requests
+from .solver import jacobi_eigh_batched, jacobi_svd_batched, pca_fit_batched
+from .stats import RequestRecord, ServingStats
+
+OPS = ("eigh", "svd", "pca")
+
+
+@dataclasses.dataclass(frozen=True)
+class ServedEigh:
+    eigenvalues: np.ndarray
+    eigenvectors: np.ndarray
+    off_norm: float
+
+
+@dataclasses.dataclass(frozen=True)
+class ServedSVD:
+    U: np.ndarray
+    S: np.ndarray
+    Vt: np.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class ServedPCA:
+    components: np.ndarray
+    eigenvalues: np.ndarray
+    mean: np.ndarray
+    scale: np.ndarray
+    evcr: np.ndarray
+    cvcr: np.ndarray
+    off_norm: float
+
+
+class Ticket:
+    """Handle returned by ``submit``; fulfilled when its batch flushes."""
+
+    __slots__ = ("rid", "op", "shape", "bucket", "record", "_result", "_done")
+
+    def __init__(self, rid: int, op: str, shape, bucket):
+        self.rid = rid
+        self.op = op
+        self.shape = shape
+        self.bucket = bucket
+        self.record: Optional[RequestRecord] = None
+        self._result = None
+        self._done = False
+
+    @property
+    def done(self) -> bool:
+        return self._done
+
+    def result(self):
+        if not self._done:
+            raise RuntimeError(
+                f"request {self.rid} still queued; call poll()/drain()")
+        return self._result
+
+    def _fulfil(self, result, record: RequestRecord) -> None:
+        self._result = result
+        self.record = record
+        self._done = True
+
+
+@dataclasses.dataclass
+class _Pending:
+    rid: int
+    matrix: np.ndarray
+    ticket: Ticket
+    t_submit: float
+    flush_by: float
+
+
+class PCAServer:
+    """Multi-tenant PCA/SVD/eigh service over one PCAConfig.
+
+    Args:
+      config: solver configuration; ``config.S`` is the default microbatch
+        size (the fabric's S arrays), ``config.T`` the default bucket tile.
+      policy: bucket policy (default: tile-mode with T = config.T).
+      max_batch: requests per device batch (default: config.S).
+      max_delay_s: default flush deadline for a queued request.
+      pad_batches: zero-pad partial flushes up to max_batch so every bucket
+        uses a single cached executable (no recompiles on timeout flushes).
+      clock: injectable monotonic clock (tests drive deadlines manually).
+    """
+
+    def __init__(
+        self,
+        config: PCAConfig = PCAConfig(),
+        policy: Optional[BucketPolicy] = None,
+        max_batch: Optional[int] = None,
+        max_delay_s: float = 0.01,
+        pad_batches: bool = True,
+        clock: Callable[[], float] = time.monotonic,
+    ):
+        self.config = config
+        self.policy = policy or BucketPolicy(T=config.T)
+        self.max_batch = max_batch or config.S
+        self.max_delay_s = max_delay_s
+        self.pad_batches = pad_batches
+        self.clock = clock
+        self.stats = ServingStats(clock=clock)
+        self._queues: Dict[Tuple, List[_Pending]] = {}
+        self._cache: Dict[Tuple, Callable] = {}
+        self._rid = itertools.count()
+
+    # -- request path -------------------------------------------------------
+    def submit(self, matrix, op: str = "eigh",
+               max_delay_s: Optional[float] = None) -> Ticket:
+        if op not in OPS:
+            raise ValueError(f"unknown op {op!r}; expected one of {OPS}")
+        matrix = np.asarray(matrix, np.float32)
+        if matrix.ndim != 2:
+            raise ValueError(f"expected a 2-D matrix, got shape {matrix.shape}")
+        if op == "eigh" and matrix.shape[0] != matrix.shape[1]:
+            raise ValueError(f"eigh needs a square matrix, got {matrix.shape}")
+        now = self.clock()
+        bucket = self.policy.bucket_shape(matrix.shape)
+        rid = next(self._rid)
+        ticket = Ticket(rid, op, matrix.shape, bucket)
+        delay = self.max_delay_s if max_delay_s is None else max_delay_s
+        key = (op, bucket)
+        queue = self._queues.setdefault(key, [])
+        queue.append(_Pending(rid, matrix, ticket, now, now + delay))
+        self.stats.record_queue_depth(len(queue), now)
+        if len(queue) >= self.max_batch:
+            self._flush_key(key)
+        return ticket
+
+    def poll(self, now: Optional[float] = None) -> int:
+        """Flush every queue whose oldest deadline has passed; returns the
+        number of requests completed."""
+        now = self.clock() if now is None else now
+        done = 0
+        for key in [k for k, q in self._queues.items()
+                    if q and min(e.flush_by for e in q) <= now]:
+            done += self._flush_key(key)
+        return done
+
+    def drain(self) -> int:
+        """Flush everything regardless of deadlines."""
+        done = 0
+        for key in list(self._queues):
+            done += self._flush_key(key)
+        return done
+
+    def pending(self) -> int:
+        return sum(len(q) for q in self._queues.values())
+
+    def solve_many(self, matrices, op: str = "eigh") -> List:
+        """Convenience: submit a burst, drain, return results in order."""
+        tickets = [self.submit(m, op=op) for m in matrices]
+        self.drain()
+        return [t.result() for t in tickets]
+
+    # -- batch execution ----------------------------------------------------
+    def _flush_key(self, key: Tuple) -> int:
+        op, bucket = key
+        queue = self._queues.pop(key, [])
+        if not queue:
+            return 0
+        t_flush = self.clock()
+        batch, n_active = stack_requests([e.matrix for e in queue], bucket)
+        b = len(queue)
+        bp = self.max_batch if self.pad_batches else b
+        if bp > b:  # inert filler: zero matrices with zero live coordinates
+            batch = np.concatenate(
+                [batch, np.zeros((bp - b, *bucket), batch.dtype)])
+            n_active = np.concatenate(
+                [n_active, np.zeros((n_active.shape[0], bp - b), np.int32)],
+                axis=1)
+        fn, hit = self._executable(op, bucket, bp)
+        out = jax.block_until_ready(fn(jnp.asarray(batch),
+                                       *map(jnp.asarray, n_active)))
+        t_done = self.clock()
+        self.stats.record_flush(hit)
+        for i, e in enumerate(queue):
+            rec = RequestRecord(
+                rid=e.rid, op=op, shape=e.matrix.shape, bucket=bucket,
+                batch_size=b, cache_hit=hit, t_submit=e.t_submit,
+                t_done=t_done, queue_s=t_flush - e.t_submit,
+                padding_waste=padding_waste(e.matrix.shape, bucket))
+            e.ticket._fulfil(self._unpack(op, out, i, e.matrix.shape), rec)
+            self.stats.record_request(rec)
+        return b
+
+    def _executable(self, op: str, bucket: Tuple[int, ...],
+                    batch: int) -> Tuple[Callable, bool]:
+        key = (op, bucket, batch, self.config)
+        hit = key in self._cache
+        if not hit:
+            cfg = self.config
+            kw = dict(sweeps=cfg.sweeps, pivot=cfg.pivot,
+                      rotation=cfg.rotation, angle=cfg.angle, tol=cfg.tol,
+                      matmul_fn=cfg.matmul_fn())
+            if op == "eigh":  # square: the two n_active axes coincide
+                fn = jax.jit(lambda C, nr, nc: jacobi_eigh_batched(C, nr, **kw))
+            elif op == "svd":
+                fn = jax.jit(
+                    lambda A, nr, nc: jacobi_svd_batched(A, nr, nc, **kw))
+            else:
+                fn = jax.jit(
+                    lambda X, nr, nc: pca_fit_batched(X, nr, nc, config=cfg))
+            self._cache[key] = fn
+        return self._cache[key], hit
+
+    @staticmethod
+    def _unpack(op: str, out, i: int, shape: Tuple[int, ...]):
+        if op == "eigh":
+            n = shape[0]
+            return ServedEigh(
+                eigenvalues=np.asarray(out.eigenvalues[i, :n]),
+                eigenvectors=np.asarray(out.eigenvectors[i, :n, :n]),
+                off_norm=float(out.off_norm[i]))
+        if op == "svd":
+            m, n = shape
+            return ServedSVD(
+                U=np.asarray(out.U[i, :m, :n]),
+                S=np.asarray(out.S[i, :n]),
+                Vt=np.asarray(out.Vt[i, :n, :n]))
+        d = shape[1]
+        return ServedPCA(
+            components=np.asarray(out.components[i, :d, :d]),
+            eigenvalues=np.asarray(out.eigenvalues[i, :d]),
+            mean=np.asarray(out.mean[i, :d]),
+            scale=np.asarray(out.scale[i, :d]),
+            evcr=np.asarray(out.evcr[i, :d]),
+            cvcr=np.asarray(out.cvcr[i, :d]),
+            off_norm=float(out.off_norm[i]))

@@ -1,0 +1,140 @@
+"""Serving telemetry: per-request latency, queue depth, padding waste,
+throughput -- plus predicted-vs-measured hooks into the analytical fabric
+model (``core.memory_model``), so measured service latency can be compared
+against what a MANOJAVAM(T, S) fabric would promise for the same request
+stream (the paper's Sec. VII-A simulator, now fed by live traffic).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Deque, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import memory_model
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestRecord:
+    rid: int
+    op: str                    # "eigh" | "svd" | "pca"
+    shape: Tuple[int, ...]     # true shape
+    bucket: Tuple[int, ...]    # padded shape
+    batch_size: int            # device batch it rode in
+    cache_hit: bool            # executable cache hit at flush time
+    t_submit: float
+    t_done: float
+    queue_s: float             # time spent waiting before the flush began
+    padding_waste: float       # 1 - true_area / bucket_area
+
+    @property
+    def latency_s(self) -> float:
+        return self.t_done - self.t_submit
+
+
+def percentile(xs: Sequence[float], p: float) -> float:
+    if not len(xs):
+        return float("nan")
+    return float(np.percentile(np.asarray(xs, np.float64), p))
+
+
+class ServingStats:
+    """Accumulates serving telemetry; cheap to record, summarised on demand.
+
+    Per-request histories are bounded ring buffers (``max_records``) so a
+    long-running server's telemetry stays O(1) in traffic volume; counters
+    (flushes, cache hits) are lifetime totals.
+    """
+
+    def __init__(self, clock=time.monotonic, max_records: int = 65536):
+        self.clock = clock
+        self.records: Deque[RequestRecord] = collections.deque(
+            maxlen=max_records)
+        self.queue_depths: Deque[Tuple[float, int]] = collections.deque(
+            maxlen=max_records)
+        self.flushes = 0
+        self.cache_hits = 0
+        self.cache_misses = 0
+
+    # -- recording ----------------------------------------------------------
+    def record_request(self, rec: RequestRecord) -> None:
+        self.records.append(rec)
+
+    def record_queue_depth(self, depth: int, now: Optional[float] = None) -> None:
+        self.queue_depths.append((self.clock() if now is None else now, depth))
+
+    def record_flush(self, cache_hit: bool) -> None:
+        self.flushes += 1
+        if cache_hit:
+            self.cache_hits += 1
+        else:
+            self.cache_misses += 1
+
+    def reset(self) -> None:
+        self.records.clear()
+        self.queue_depths.clear()
+        self.flushes = self.cache_hits = self.cache_misses = 0
+
+    # -- summaries ----------------------------------------------------------
+    def summary(self) -> Dict[str, float]:
+        lat = [r.latency_s for r in self.records]
+        if self.records:
+            span = (max(r.t_done for r in self.records)
+                    - min(r.t_submit for r in self.records))
+        else:
+            span = 0.0
+        depths = [d for _, d in self.queue_depths]
+        return {
+            "requests": len(self.records),
+            "wall_s": span,
+            "requests_per_s": len(self.records) / span if span > 0 else 0.0,
+            "latency_p50_ms": percentile(lat, 50) * 1e3,
+            "latency_p99_ms": percentile(lat, 99) * 1e3,
+            "queue_p50_ms": percentile(
+                [r.queue_s for r in self.records], 50) * 1e3,
+            "mean_batch": (float(np.mean([r.batch_size for r in self.records]))
+                           if self.records else 0.0),
+            "mean_padding_waste": (
+                float(np.mean([r.padding_waste for r in self.records]))
+                if self.records else 0.0),
+            "max_queue_depth": max(depths) if depths else 0,
+            "flushes": self.flushes,
+            "cache_hit_rate": (self.cache_hits / self.flushes
+                               if self.flushes else 0.0),
+        }
+
+    # -- fabric-model hooks -------------------------------------------------
+    @staticmethod
+    def predicted_seconds(op: str, shape: Tuple[int, ...],
+                          fabric: memory_model.FabricConfig =
+                          memory_model.VIRTEX_US) -> float:
+        """What the analytical MANOJAVAM(T, S) model promises per request."""
+        f = fabric.freq_mhz * 1e6
+        if op == "eigh":
+            return memory_model.jacobi_cycles(shape[0], fabric) / f
+        m, n = shape[0], shape[1]
+        est = memory_model.pca_seconds(m, n, fabric,
+                                       include_projection=(op == "pca"))
+        return est["total_s"] if op == "pca" else est["covariance_s"] + est["svd_s"]
+
+    def predicted_vs_measured(self, fabric: memory_model.FabricConfig =
+                              memory_model.VIRTEX_US) -> List[Dict[str, float]]:
+        """Per-request (predicted fabric latency, measured service latency).
+
+        The measured number includes queueing + batching + dispatch; the
+        predicted number is pure fabric compute -- the gap is the serving
+        overhead the engine exists to amortise.
+        """
+        out = []
+        for r in self.records:
+            pred = self.predicted_seconds(r.op, r.shape, fabric)
+            out.append({
+                "rid": r.rid,
+                "op": r.op,
+                "predicted_s": pred,
+                "measured_s": r.latency_s,
+                "ratio": r.latency_s / pred if pred > 0 else float("inf"),
+            })
+        return out

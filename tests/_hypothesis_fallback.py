@@ -1,0 +1,89 @@
+"""Lightweight stand-in for ``hypothesis`` on bare environments.
+
+The tier-1 suite must collect and run without optional dev dependencies.
+When ``hypothesis`` is importable the test modules use the real thing; when
+it is not, this module provides deterministic miniature replacements for the
+small subset the suite uses (``given`` / ``settings`` / ``strategies``):
+each property test runs a handful of seeded pseudo-random examples instead
+of a full shrinking search.
+
+Usage (in test modules):
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:                      # bare env: deterministic samples
+        from _hypothesis_fallback import given, settings, st
+"""
+from __future__ import annotations
+
+import types
+
+import numpy as np
+
+# Fallback sample budget: enough to exercise shape/seed variety without a
+# shrinking engine, small enough to keep bare-env CI fast.
+FALLBACK_MAX_EXAMPLES = 5
+
+
+class _Strategy:
+    def __init__(self, sample):
+        self._sample = sample
+
+    def sample(self, rng):
+        return self._sample(rng)
+
+
+def _integers(min_value, max_value):
+    return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def _sampled_from(elements):
+    elements = list(elements)
+    return _Strategy(lambda rng: elements[int(rng.integers(len(elements)))])
+
+
+def _floats(min_value, max_value, **_):
+    return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+
+def _booleans():
+    return _Strategy(lambda rng: bool(rng.integers(2)))
+
+
+st = types.SimpleNamespace(
+    integers=_integers,
+    sampled_from=_sampled_from,
+    floats=_floats,
+    booleans=_booleans,
+)
+
+
+def settings(max_examples: int = 10, **_kwargs):
+    """Accepts (and mostly ignores) real-hypothesis settings knobs."""
+
+    def deco(fn):
+        fn._fallback_max_examples = min(max_examples, FALLBACK_MAX_EXAMPLES)
+        return fn
+
+    return deco
+
+
+def given(**strategies):
+    def deco(fn):
+        # NOT functools.wraps: the wrapper must present a zero-arg signature
+        # so pytest does not mistake the drawn parameters for fixtures.
+        def wrapper():
+            n = getattr(wrapper, "_fallback_max_examples",
+                        FALLBACK_MAX_EXAMPLES)
+            rng = np.random.default_rng(0)
+            for _ in range(n):
+                drawn = {k: s.sample(rng) for k, s in strategies.items()}
+                fn(**drawn)
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        wrapper.__dict__.update(fn.__dict__)
+        return wrapper
+
+    return deco

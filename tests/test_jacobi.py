@@ -4,7 +4,11 @@ import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # bare env: deterministic fallback sampler
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core import (jacobi_eigh, jacobi_svd, offdiag_frobenius,
                         relative_offdiag, round_robin_rounds)

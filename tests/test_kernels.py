@@ -106,7 +106,10 @@ def test_mm_engine_is_blocked_covariance_backend():
 # ---------------------------------------------------------------------------
 # hypothesis sweeps
 # ---------------------------------------------------------------------------
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # bare env: deterministic fallback sampler
+    from _hypothesis_fallback import given, settings, st
 
 
 @settings(max_examples=12, deadline=None)

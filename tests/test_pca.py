@@ -3,7 +3,10 @@ projection variance, paper-faithful (DLE+CORDIC+MM-engine) configuration."""
 import numpy as np
 import pytest
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # bare env: deterministic fallback sampler
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core import (PCAConfig, covariance, evcr_cvcr, find_pivot,
                         find_pivot_tilewise, fit, fit_transform, select_k,

@@ -1,0 +1,229 @@
+"""Serving subsystem: bucket policies, batched-solver equivalence with the
+per-matrix path, exactness of bucket padding, and PCAServer microbatching
+(flush-on-full / flush-on-timeout / executable-cache reuse)."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core import PCAConfig, fit, jacobi_eigh, jacobi_svd
+from repro.serving import (BucketPolicy, PCAServer, jacobi_eigh_batched,
+                           jacobi_svd_batched, pad_to_bucket, padding_waste,
+                           pca_fit_batched, stack_requests)
+
+
+def _sym(n, seed=0):
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((n, n)).astype(np.float32)
+    return (a + a.T) / 2
+
+
+# ---------------------------------------------------------------------------
+# bucketing
+# ---------------------------------------------------------------------------
+
+def test_bucket_policy_tile():
+    pol = BucketPolicy(T=16, mode="tile")
+    assert pol.bucket_dim(1) == 16
+    assert pol.bucket_dim(16) == 16
+    assert pol.bucket_dim(17) == 32
+    assert pol.bucket_shape((10, 50)) == (16, 64)
+
+
+def test_bucket_policy_pow2():
+    pol = BucketPolicy(T=16, mode="pow2")
+    # tile counts round to powers of two: 1, 2, 4, 8 tiles
+    assert pol.bucket_dim(16) == 16
+    assert pol.bucket_dim(33) == 64
+    assert pol.bucket_dim(70) == 128
+
+
+def test_pad_and_stack():
+    mats = [np.ones((3, 5), np.float32), np.ones((4, 2), np.float32)]
+    batch, n_active = stack_requests(mats, (8, 8))
+    assert batch.shape == (2, 8, 8)
+    np.testing.assert_array_equal(n_active, [[3, 4], [5, 2]])
+    assert batch[0, 3:, :].sum() == 0 and batch[0, :, 5:].sum() == 0
+    with pytest.raises(ValueError):
+        pad_to_bucket(np.ones((9, 2)), (8, 8))
+    assert padding_waste((4, 4), (8, 8)) == pytest.approx(0.75)
+
+
+# ---------------------------------------------------------------------------
+# batched solvers vs the per-matrix path
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("pivot", ["parallel", "cyclic", "paper"])
+def test_eigh_batched_matches_loop(pivot):
+    mats = [_sym(12, seed=i) for i in range(4)]
+    sweeps = 30 if pivot == "paper" else 12
+    res = jacobi_eigh_batched(jnp.asarray(np.stack(mats)), sweeps=sweeps,
+                              pivot=pivot)
+    for i, m in enumerate(mats):
+        ref = jacobi_eigh(jnp.asarray(m), sweeps=sweeps, pivot=pivot)
+        np.testing.assert_allclose(np.asarray(res.eigenvalues[i]),
+                                   np.asarray(ref.eigenvalues),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.abs(np.asarray(res.eigenvectors[i])),
+                                   np.abs(np.asarray(ref.eigenvectors)),
+                                   atol=1e-4)
+
+
+@pytest.mark.parametrize("angle", ["rutishauser", "atan2", "cordic"])
+def test_bucket_padding_is_exact(angle):
+    """A problem embedded in a zero-padded bucket: padded coordinates stay
+    *exactly* unmixed (null-pivot guard), so padded eigenvalues are exact
+    zeros, the padded block of V is exactly basis vectors, and the live
+    eigenpairs match the un-padded solve."""
+    n, nb = 11, 24
+    a = _sym(n, seed=3)
+    padded = np.zeros((1, nb, nb), np.float32)
+    padded[0, :n, :n] = a
+    res = jacobi_eigh_batched(jnp.asarray(padded), n_active=np.array([n]),
+                              sweeps=14, angle=angle)
+    w = np.asarray(res.eigenvalues[0])
+    v = np.asarray(res.eigenvectors[0])
+    assert np.all(w[n:] == 0.0)
+    assert np.all(v[n:, :n] == 0.0)        # live eigenvectors: no padded mass
+    assert np.all(v[:n, n:] == 0.0)        # padded eigenvectors: no live mass
+    ref = np.linalg.eigh(a)[0][::-1]
+    np.testing.assert_allclose(w[:n], ref, rtol=1e-4, atol=1e-4)
+
+
+def test_bucket_padding_matches_native_solve():
+    n, nb = 13, 32
+    a = _sym(n, seed=7)
+    padded = np.zeros((1, nb, nb), np.float32)
+    padded[0, :n, :n] = a
+    res = jacobi_eigh_batched(jnp.asarray(padded), n_active=np.array([n]),
+                              sweeps=14)
+    native = jacobi_eigh(jnp.asarray(a), sweeps=14)
+    np.testing.assert_allclose(np.asarray(res.eigenvalues[0, :n]),
+                               np.asarray(native.eigenvalues),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_svd_batched_mixed_shapes():
+    rng = np.random.default_rng(5)
+    shapes = [(20, 6), (17, 9), (24, 4)]
+    bucket = (24, 16)
+    mats = [rng.standard_normal(s).astype(np.float32) for s in shapes]
+    batch, (nr, nc) = stack_requests(mats, bucket)
+    res = jacobi_svd_batched(jnp.asarray(batch), n_rows=nr, n_cols=nc,
+                             sweeps=14)
+    for i, (a, (m, d)) in enumerate(zip(mats, shapes)):
+        ref = np.linalg.svd(a, compute_uv=False)
+        np.testing.assert_allclose(np.asarray(res.S[i, :d]), ref,
+                                   rtol=1e-4, atol=1e-4)
+        u = np.asarray(res.U[i, :m, :d])
+        s = np.asarray(res.S[i, :d])
+        vt = np.asarray(res.Vt[i, :d, :d])
+        np.testing.assert_allclose(u * s[None, :] @ vt, a, atol=2e-3)
+
+
+def test_pca_fit_batched_matches_unbatched():
+    rng = np.random.default_rng(6)
+    cfg = PCAConfig(T=8, sweeps=15)
+    shapes = [(40, 6), (50, 11)]
+    bucket = (56, 16)
+    mats = [rng.standard_normal(s).astype(np.float32) for s in shapes]
+    batch, (nr, nc) = stack_requests(mats, bucket)
+    res = pca_fit_batched(jnp.asarray(batch), n_rows=nr, n_cols=nc,
+                          config=cfg)
+    for i, (x, (m, d)) in enumerate(zip(mats, shapes)):
+        ref = fit(x, cfg)
+        np.testing.assert_allclose(np.asarray(res.eigenvalues[i, :d]),
+                                   np.asarray(ref.eigenvalues),
+                                   rtol=1e-4, atol=1e-3)
+        np.testing.assert_allclose(np.asarray(res.mean[i, :d]),
+                                   np.asarray(ref.mean), atol=1e-5)
+        np.testing.assert_allclose(np.asarray(res.cvcr[i, :d]),
+                                   np.asarray(ref.cvcr), atol=1e-4)
+
+
+def test_svd_matmul_fn_is_used_everywhere():
+    """core satellite: the Gram product and U back-projection must route
+    through the injected matmul."""
+    calls = []
+
+    def counting_mm(a, b):
+        calls.append((a.shape, b.shape))
+        return jnp.matmul(a, b)
+
+    a = jnp.asarray(np.random.default_rng(0).standard_normal((10, 4)),
+                    jnp.float32)
+    jacobi_svd(a, matmul_fn=counting_mm, sweeps=4, rotation="rowcol")
+    shapes = set(calls)
+    assert ((4, 10), (10, 4)) in shapes     # Gram A^T A
+    assert ((10, 4), (4, 4)) in shapes      # U = A V
+
+
+# ---------------------------------------------------------------------------
+# engine behavior
+# ---------------------------------------------------------------------------
+
+def _server(clock=None, **kw):
+    kw.setdefault("config", PCAConfig(T=8, S=4, sweeps=12))
+    kw.setdefault("policy", BucketPolicy(T=8))
+    if clock is not None:
+        kw["clock"] = clock
+    return PCAServer(**kw)
+
+
+def test_engine_flush_on_full():
+    srv = _server(max_delay_s=1e9)   # deadline can never fire
+    tickets = [srv.submit(_sym(6, seed=i)) for i in range(4)]
+    assert all(t.done for t in tickets)          # S-full flush, no poll needed
+    assert srv.pending() == 0
+    for i, t in enumerate(tickets):
+        ref = np.linalg.eigh(_sym(6, seed=i))[0][::-1]
+        np.testing.assert_allclose(t.result().eigenvalues, ref,
+                                   rtol=1e-3, atol=1e-3)
+
+
+def test_engine_flush_on_timeout():
+    t = [0.0]
+    srv = _server(clock=lambda: t[0], max_delay_s=0.5)
+    ticket = srv.submit(_sym(6))
+    assert not ticket.done
+    assert srv.poll() == 0                       # deadline not reached
+    t[0] = 0.49
+    assert srv.poll() == 0
+    t[0] = 0.51
+    assert srv.poll() == 1 and ticket.done       # deadline flush
+    rec = ticket.record
+    assert rec.batch_size == 1 and rec.queue_s == pytest.approx(0.51)
+
+
+def test_engine_executable_cache_hits_on_repeated_shapes():
+    srv = _server(max_delay_s=1e9)
+    [srv.submit(_sym(6, seed=i)) for i in range(4)]
+    assert srv.stats.cache_misses == 1 and srv.stats.cache_hits == 0
+    [srv.submit(_sym(6, seed=10 + i)) for i in range(4)]
+    assert srv.stats.cache_hits == 1             # same (op, bucket, batch)
+    # timeout-style partial flush pads the batch -> same executable, still hit
+    srv.submit(_sym(7, seed=20))
+    srv.drain()
+    assert srv.stats.cache_hits == 2
+    assert len(srv._cache) == 1
+
+
+def test_engine_mixed_buckets_separate_queues():
+    srv = _server(max_delay_s=1e9)
+    small = srv.submit(_sym(6))                  # bucket (8, 8)
+    big = srv.submit(_sym(12))                   # bucket (16, 16)
+    assert not small.done and not big.done and srv.pending() == 2
+    srv.drain()
+    assert small.done and big.done
+    assert small.record.bucket == (8, 8) and big.record.bucket == (16, 16)
+
+
+def test_engine_stats_summary():
+    srv = _server(max_delay_s=1e9)
+    srv.solve_many([_sym(6, seed=i) for i in range(8)])
+    s = srv.stats.summary()
+    assert s["requests"] == 8 and s["flushes"] == 2
+    assert s["mean_batch"] == 4.0
+    assert 0.0 <= s["mean_padding_waste"] < 1.0
+    assert s["latency_p99_ms"] >= s["latency_p50_ms"] > 0.0
+    pvm = srv.stats.predicted_vs_measured()
+    assert len(pvm) == 8 and all(r["predicted_s"] > 0 for r in pvm)
