@@ -1,17 +1,57 @@
 """EXPERIMENTS §Perf evidence: emits the hillclimb variant records
-(experiments/perf/*.json) next to their baselines as CSV rows."""
+(experiments/perf/*.json) next to their baselines as CSV rows, plus the
+backend-sweep axis -- the same registry op timed on every backend available
+on this host (``ref`` XLA, ``interpret`` Pallas-interpreter, and ``pallas``
+when a TPU is attached), so backend choice shows up in the perf trajectory
+the way deployment-target choice does in the paper (Artix-7 vs Virtex-US+).
+"""
 from __future__ import annotations
 
 import json
 import pathlib
 
-from .common import emit
+from .common import emit, emit_json, time_call
 
 PERF_DIR = pathlib.Path(__file__).resolve().parent.parent / "experiments" / "perf"
 DRY_DIR = pathlib.Path(__file__).resolve().parent.parent / "experiments" / "dryrun"
 
 
+def available_backends():
+    from repro import backends
+    return backends.available()
+
+
+def backend_sweep(fast: bool = True):
+    """Time mm_engine_matmul and dle_find_pivot per backend (one shape)."""
+    import numpy as np
+    import jax.numpy as jnp
+    from repro.kernels import ops
+
+    m = 128 if fast else 512
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.standard_normal((m, m)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((m, m)), jnp.float32)
+    c = np.asarray(rng.standard_normal((m, m)), np.float32)
+    c = jnp.asarray(c + c.T)
+
+    rows = []
+    for be in available_backends():
+        mm_us = time_call(
+            lambda: ops.mm_engine_matmul(a, b, block=64, backend=be))
+        dle_us = time_call(
+            lambda: ops.dle_find_pivot(c, tile=64, backend=be))
+        rows.append({"backend": be, "m": m,
+                     "mm_engine_us": mm_us, "dle_scan_us": dle_us})
+        emit(f"perf/backend_sweep/mm_engine_{m}/{be}", round(mm_us, 1),
+             "block=64")
+        emit(f"perf/backend_sweep/dle_scan_{m}/{be}", round(dle_us, 1),
+             "tile=64")
+    emit_json("backend_sweep", {"rows": rows})
+    return rows
+
+
 def run(fast: bool = True):
+    backend_sweep(fast)
     if not PERF_DIR.exists():
         emit("perf/missing", "", "run the §Perf experiments first")
         return
@@ -43,3 +83,8 @@ def run(fast: bool = True):
                  f"compute_s={rf['compute_s']:.3f};"
                  f"memory_s={rf['memory_s']:.3f};"
                  f"collective_s={rf['collective_s']:.3f}")
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    backend_sweep(fast=True)

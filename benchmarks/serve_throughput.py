@@ -13,16 +13,18 @@ import time
 
 from repro.core import PCAConfig
 from repro.launch.serve_pca import mixed_traffic
-from repro.serving import BucketPolicy, PCAServer
+from repro.serving import BucketPolicy, PCAServer, threshold_router
 
 from .common import emit, emit_json
 
 MIXED_DIMS = (10, 14, 18, 24, 29, 31, 37, 46)
 
 
-def _measure(mats, T: int, S: int, mode: str, sweeps: int = 10):
+def _measure(mats, T: int, S: int, mode: str, sweeps: int = 10,
+             backend_router=None):
     srv = PCAServer(PCAConfig(T=T, S=S, sweeps=sweeps),
-                    policy=BucketPolicy(T=T, mode=mode), max_delay_s=10.0)
+                    policy=BucketPolicy(T=T, mode=mode), max_delay_s=10.0,
+                    backend_router=backend_router)
     srv.solve_many(mats)            # warmup: compile every bucket executable
     srv.stats.reset()
     t0 = time.perf_counter()
@@ -79,5 +81,50 @@ def run(fast: bool = True) -> None:
     })
 
 
+def selftest() -> int:
+    """CI smoke: one backend-sweep point -- a routed server splits traffic
+    across two kernel backends in one run; results are verified against
+    numpy and both backends must actually be exercised."""
+    import json
+
+    import numpy as np
+
+    mats = mixed_traffic(8, "eigh", (6, 20))
+    srv = PCAServer(PCAConfig(T=8, S=4, sweeps=14),
+                    policy=BucketPolicy(T=8), max_delay_s=10.0,
+                    backend_router=threshold_router(16, large="interpret",
+                                                    small=None))
+    # warmup pass doubles as the correctness check (compiles both buckets)
+    for m, r in zip(mats, srv.solve_many(mats)):
+        ref = np.linalg.eigh(m)[0][::-1]
+        np.testing.assert_allclose(r.eigenvalues, ref, rtol=1e-3, atol=1e-3)
+    routed = sorted({(r.bucket, str(r.backend))
+                     for r in srv.stats.records})
+    assert len({b for _, b in routed}) == 2, routed
+    srv.stats.reset()
+    t0 = time.perf_counter()
+    srv.solve_many(mats)
+    wall = time.perf_counter() - t0
+    s = srv.stats.summary()
+    assert s["cache_hit_rate"] == 1.0, s   # steady state: no recompiles
+    print("serve_throughput selftest ok:", json.dumps({
+        "routed_buckets": [f"{bkt}->{be}" for bkt, be in routed],
+        "requests_per_s": round(len(mats) / wall, 1),
+        "cache_hit_rate": s["cache_hit_rate"],
+    }))
+    return 0
+
+
 if __name__ == "__main__":
-    run(fast=True)
+    import argparse
+    import sys
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--selftest", action="store_true",
+                    help="one backend-sweep smoke point and exit")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    if args.selftest:
+        sys.exit(selftest())
+    print("name,us_per_call,derived")
+    run(fast=not args.full)

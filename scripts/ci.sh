@@ -1,16 +1,37 @@
 #!/usr/bin/env bash
-# CI entry point: a short serving smoke (so the multi-tenant server path --
-# submit -> bucket -> batch -> executable cache -> unpack -- is exercised on
-# every PR) followed by the tier-1 test suite.  The smoke runs first because
-# the seed suite still carries known environment-dependent failures (Pallas
-# kernel tests on non-TPU backends) that stop `pytest -x` early.
+# CI entry point.  Order:
+#   1. resolved-API banner  -- which Pallas compiler-params spelling and
+#      which kernel backends this host resolves to (version drift shows up
+#      here first, not as 28 cryptic kernel failures)
+#   2. serving smoke        -- submit -> bucket -> batch -> cache -> unpack
+#   3. backend-sweep smoke  -- one sweep point: a router splits two buckets
+#      across two kernel backends in one server, verified against numpy
+#   4. tier-1 tests         -- fast tier by default (pytest.ini deselects
+#      `slow`); MUST be zero failures, enforced by the pytest exit code
+#      under `set -e`.  `scripts/ci.sh --slow` appends the slow tier.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+echo "== resolved accelerator API =="
+python - <<'EOF'
+from repro.kernels import compat
+from repro import backends
+print(compat.describe())
+print(backends.describe())
+EOF
+
 echo "== serving smoke (serve_pca --selftest) =="
 python -m repro.launch.serve_pca --selftest
 
-echo "== tier-1 tests =="
+echo "== backend-sweep smoke (serve_throughput --selftest) =="
+python -m benchmarks.serve_throughput --selftest
+
+echo "== tier-1 tests (fast tier; zero failures required) =="
 python -m pytest -x -q
+
+if [[ "${1:-}" == "--slow" ]]; then
+    echo "== slow tier =="
+    python -m pytest -q -m slow
+fi

@@ -1,0 +1,17 @@
+"""Backend-dispatch subsystem: one kernel API, many execution targets.
+
+``repro.backends.registry`` maps every perf-critical op to named
+implementations (``pallas`` / ``interpret`` / ``ref``) with a process-level
+default, per-call override, and the ``REPRO_KERNEL_BACKEND`` environment
+escape hatch.  See ``repro.kernels.ops`` for the registered ops and
+``repro.serving`` for per-bucket backend routing.
+"""
+from .registry import (BACKENDS, ENV_VAR, available, backends_for,
+                       default_backend, describe, register, registered_ops,
+                       resolve, set_default_backend, use_backend)
+
+__all__ = [
+    "BACKENDS", "ENV_VAR", "available", "backends_for", "default_backend",
+    "describe", "register", "registered_ops", "resolve",
+    "set_default_backend", "use_backend",
+]

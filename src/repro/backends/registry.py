@@ -1,0 +1,146 @@
+"""Backend-dispatch registry for the kernel layer.
+
+The paper's fabric is *unified*: one engine serves matmul and Jacobi/CORDIC
+SVD on both deployment targets (Artix-7 edge, Virtex-US+ HPC).  The software
+image of that property is this registry: every perf-critical op resolves, at
+call time, to one of several named implementations:
+
+  ``pallas``     compiled Pallas TPU kernel (requires a TPU backend)
+  ``interpret``  the same Pallas kernel under the Pallas interpreter
+                 (runs anywhere; exact kernel semantics, CPU speed)
+  ``ref``        the pure-jnp XLA reference (``repro.kernels.ref``)
+
+Resolution order for the backend name:
+
+  1. per-call override (``backend=`` on the op wrapper, or the serving
+     layer's per-bucket router);
+  2. process-level default (``set_default_backend`` / ``use_backend``);
+  3. the ``REPRO_KERNEL_BACKEND`` environment variable;
+  4. auto: ``pallas`` when jax runs on TPU, else ``interpret``.
+
+This replaces the old per-wrapper ``interpret = backend != "tpu"``
+heuristic in ``repro.kernels.ops`` with one inspectable policy point.
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+import threading
+from typing import Callable, Dict, Optional, Tuple
+
+BACKENDS: Tuple[str, ...] = ("pallas", "interpret", "ref")
+
+ENV_VAR = "REPRO_KERNEL_BACKEND"
+
+_REGISTRY: Dict[str, Dict[str, Callable]] = {}
+_STATE = threading.local()
+_PROCESS_DEFAULT: Optional[str] = None
+
+
+def _check_backend(name: str) -> str:
+    if name not in BACKENDS:
+        raise ValueError(
+            f"unknown backend {name!r}; expected one of {BACKENDS}")
+    return name
+
+
+def register(op: str, backend: str) -> Callable[[Callable], Callable]:
+    """Decorator: ``@register("mm_engine_matmul", "ref")``."""
+    _check_backend(backend)
+
+    def deco(fn: Callable) -> Callable:
+        _REGISTRY.setdefault(op, {})[backend] = fn
+        return fn
+
+    return deco
+
+
+_BUILTINS_LOADED = False
+
+
+def _ensure_populated() -> None:
+    # built-in implementations register themselves when repro.kernels.ops
+    # imports; resolve() must work even if the caller never imported it
+    # explicitly (and even if custom ops registered first)
+    global _BUILTINS_LOADED
+    if not _BUILTINS_LOADED:
+        _BUILTINS_LOADED = True
+        import repro.kernels.ops  # noqa: F401
+
+
+def registered_ops() -> Tuple[str, ...]:
+    _ensure_populated()
+    return tuple(sorted(_REGISTRY))
+
+
+def backends_for(op: str) -> Tuple[str, ...]:
+    _ensure_populated()
+    if op not in _REGISTRY:
+        raise KeyError(f"unknown op {op!r}; registered: {registered_ops()}")
+    impls = _REGISTRY[op]
+    return tuple(b for b in BACKENDS if b in impls)
+
+
+def available() -> Tuple[str, ...]:
+    """Backends runnable on this host (``pallas`` needs a real TPU; the
+    interpreter and the XLA reference run anywhere)."""
+    import jax
+    return tuple(b for b in BACKENDS
+                 if b != "pallas" or jax.default_backend() == "tpu")
+
+
+def default_backend() -> str:
+    """The backend used when no per-call override is given."""
+    override = getattr(_STATE, "backend", None)
+    if override is not None:
+        return override
+    if _PROCESS_DEFAULT is not None:
+        return _PROCESS_DEFAULT
+    env = os.environ.get(ENV_VAR)
+    if env:
+        return _check_backend(env)
+    import jax
+    return "pallas" if jax.default_backend() == "tpu" else "interpret"
+
+
+def set_default_backend(name: Optional[str]) -> None:
+    """Set (or with ``None`` clear) the process-level default backend."""
+    global _PROCESS_DEFAULT
+    _PROCESS_DEFAULT = None if name is None else _check_backend(name)
+
+
+@contextlib.contextmanager
+def use_backend(name: str):
+    """Scoped (thread-local) backend override, strongest non-per-call rule."""
+    _check_backend(name)
+    prev = getattr(_STATE, "backend", None)
+    _STATE.backend = name
+    try:
+        yield
+    finally:
+        _STATE.backend = prev
+
+
+def resolve(op: str, backend: Optional[str] = None) -> Callable:
+    """The implementation of ``op`` for ``backend`` (None = resolution order
+    above)."""
+    _ensure_populated()
+    if op not in _REGISTRY:
+        raise KeyError(f"unknown op {op!r}; registered: {registered_ops()}")
+    name = default_backend() if backend is None else _check_backend(backend)
+    impls = _REGISTRY[op]
+    if name not in impls:
+        raise KeyError(
+            f"op {op!r} has no {name!r} backend; available: "
+            f"{backends_for(op)}")
+    return impls[name]
+
+
+def describe() -> str:
+    """Multi-line op x backend availability table for CI logs."""
+    _ensure_populated()
+    lines = [f"default backend: {default_backend()}"
+             f" (env {ENV_VAR}={os.environ.get(ENV_VAR, '<unset>')})"]
+    for op in registered_ops():
+        lines.append(f"  {op:<20s} {', '.join(backends_for(op))}")
+    return "\n".join(lines)

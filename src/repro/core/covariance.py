@@ -19,7 +19,8 @@ from typing import Callable, Optional, Tuple
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
-from jax.experimental.shard_map import shard_map
+
+from repro.parallel.sharding import shard_map_compat
 
 
 def standardize(X, eps: float = 1e-8) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
@@ -88,10 +89,11 @@ def distributed_covariance(
         c = blocked_covariance(x, block_m=block_m, matmul_fn=matmul_fn)
         return jax.lax.psum(c, axis_name=data_axis)
 
-    fn = shard_map(
+    fn = shard_map_compat(
         local,
         mesh=mesh,
         in_specs=P(data_axis, None),
         out_specs=P(),
+        check_replication=True,
     )
     return fn(X)

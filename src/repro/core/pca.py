@@ -31,13 +31,23 @@ class PCAConfig:
     rotation: str = "rowcol"      # "matmul" = unified MM-Engine datapath
     angle: str = "rutishauser"    # "cordic" = paper-faithful datapath
     standardize: bool = True
-    use_pallas: bool = False      # route matmuls through kernels/mm_engine
+    # kernel backend for the matmul datapath: None = plain XLA jnp.matmul;
+    # "pallas" / "interpret" / "ref" route every matmul through the
+    # mm_engine op in the backend registry (repro.backends).  The old
+    # boolean ``use_pallas=True`` is spelled ``backend="pallas"`` now.
+    backend: Optional[str] = None
+
+    @property
+    def use_pallas(self) -> bool:
+        return self.backend == "pallas"
 
     def matmul_fn(self) -> Optional[Callable]:
-        if not self.use_pallas:
+        if self.backend is None:
             return None
         from repro.kernels import ops as kops
-        return lambda a, b: kops.mm_engine_matmul(a, b, block=self.T)
+        backend = self.backend
+        return lambda a, b: kops.mm_engine_matmul(a, b, block=self.T,
+                                                  backend=backend)
 
 
 PAPER_CONFIG_ARTIX7 = PCAConfig(T=4, S=8)

@@ -6,7 +6,11 @@
   flash_attention -- online-softmax blockwise attention (framework hot spot)
   mamba_scan      -- chunked selective-scan for SSM architectures
 
-Import ``repro.kernels.ops`` for the jit'd padded wrappers and
-``repro.kernels.ref`` for the pure-jnp oracles.
+Import ``repro.kernels.ops`` for the jit'd padded wrappers (each dispatches
+through the ``repro.backends`` registry to a ``pallas`` / ``interpret`` /
+``ref`` implementation) and ``repro.kernels.ref`` for the pure-jnp oracles.
+``repro.kernels.compat`` pins the version-portable Pallas TPU API surface;
+kernel modules must import ``pl`` / memory spaces / compiler params from it
+rather than from ``jax.experimental.pallas.tpu`` directly.
 """
-from . import ops, ref  # noqa: F401
+from . import compat, ops, ref  # noqa: F401

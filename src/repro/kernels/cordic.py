@@ -15,10 +15,10 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
-
 from repro.core.cordic import CORDIC_ITERS, _ATAN_FIXED, _GAIN, _FRAC_BITS
+
+from . import compat
+from .compat import pl
 
 _ONE_F = float(1 << _FRAC_BITS)
 
@@ -90,11 +90,9 @@ def cordic_rotation_params(
         in_specs=[spec, spec, spec],
         out_specs=[spec, spec, spec],
         out_shape=[jax.ShapeDtypeStruct((n,), jnp.float32)] * 3,
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel",),
-        ),
         interpret=interpret,
         name="cordic",
+        **compat.compiler_params(dimension_semantics=("parallel",)),
     )(apq.astype(jnp.float32), app.astype(jnp.float32),
       aqq.astype(jnp.float32))
     return th[:k], c[:k], s[:k]

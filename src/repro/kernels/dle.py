@@ -16,8 +16,9 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from . import compat
+from .compat import pl
 
 
 def _dle_kernel(c_ref, val_ref, idx_ref, best_val, best_idx, *,
@@ -71,21 +72,20 @@ def dle_scan(c: jax.Array, *, tile: int = 128, interpret: bool = False):
         grid=(grid_n, grid_n),
         in_specs=[pl.BlockSpec((tile, tile), lambda i, j: (i, j))],
         out_specs=[
-            pl.BlockSpec(memory_space=pltpu.SMEM),
-            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=compat.SMEM),
+            pl.BlockSpec(memory_space=compat.SMEM),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((1,), jnp.float32),
             jax.ShapeDtypeStruct((1,), jnp.int32),
         ],
         scratch_shapes=[
-            pltpu.SMEM((1,), jnp.float32),
-            pltpu.SMEM((1,), jnp.int32),
+            compat.SMEM((1,), jnp.float32),
+            compat.SMEM((1,), jnp.int32),
         ],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("arbitrary", "arbitrary"),
-        ),
         interpret=interpret,
         name="dle_scan",
+        **compat.compiler_params(
+            dimension_semantics=("arbitrary", "arbitrary")),
     )(c)
     return val[0], idx[0]

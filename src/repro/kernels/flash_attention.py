@@ -15,8 +15,9 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from . import compat
+from .compat import pl
 
 _NEG_INF = -1e30
 
@@ -101,13 +102,12 @@ def flash_attention(
         out_specs=pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
         out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
         scratch_shapes=[
-            pltpu.VMEM((block_q, 128), jnp.float32),
-            pltpu.VMEM((block_q, 128), jnp.float32),
-            pltpu.VMEM((block_q, d), jnp.float32),
+            compat.VMEM((block_q, 128), jnp.float32),
+            compat.VMEM((block_q, 128), jnp.float32),
+            compat.VMEM((block_q, d), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary"),
-        ),
         interpret=interpret,
         name="flash_attention",
+        **compat.compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
     )(q, k, v)

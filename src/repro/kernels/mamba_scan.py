@@ -17,8 +17,9 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax import lax
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from . import compat
+from .compat import pl
 
 
 def _scan_kernel(u_ref, dt_ref, b_ref, c_ref, a_ref, dskip_ref, y_ref,
@@ -76,11 +77,10 @@ def mamba_scan(
         ],
         out_specs=pl.BlockSpec((1, chunk, d), dchunk),
         out_shape=jax.ShapeDtypeStruct((bsz, L, d), u.dtype),
-        scratch_shapes=[pltpu.VMEM((d, n), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "arbitrary"),
-        ),
+        scratch_shapes=[compat.VMEM((d, n), jnp.float32)],
         interpret=interpret,
         name="mamba_scan",
+        **compat.compiler_params(
+            dimension_semantics=("parallel", "arbitrary")),
     )(u, delta, B, C, A.astype(jnp.float32),
       D_skip.astype(jnp.float32)[None, :])

@@ -19,8 +19,9 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from . import compat
+from .compat import pl
 
 
 def _mm_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k: int, out_dtype):
@@ -73,10 +74,9 @@ def mm_engine(
         ],
         out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
-        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary"),
-        ),
+        scratch_shapes=[compat.VMEM((block_m, block_n), jnp.float32)],
         interpret=interpret,
         name="mm_engine",
+        **compat.compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
     )(a, b)

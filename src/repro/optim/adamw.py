@@ -46,6 +46,14 @@ _QBLOCK = 128  # int8 block size (last-dim blocks)
 
 
 def _quantize(x):
+    """Block-absmax int8 for the sqrt(v) moment (non-negative input).
+
+    Rounds UP: sqrt(v) read back >= truth, so a coordinate whose true
+    sqrt(v) is below one quantum still reads as a full quantum instead of
+    0.  Round-to-nearest collapses such denominators to eps and the Adam
+    update explodes (observed: small-model training diverges within ~15
+    steps); rounding up only ever makes the update more conservative.
+    """
     shape = x.shape
     last = shape[-1]
     pad = (-last) % _QBLOCK
@@ -54,7 +62,7 @@ def _quantize(x):
     xb = x.reshape(x.shape[:-1] + (-1, _QBLOCK))
     scale = jnp.max(jnp.abs(xb), axis=-1, keepdims=True) / 127.0
     scale = jnp.maximum(scale, 1e-20)
-    q = jnp.clip(jnp.round(xb / scale), -127, 127).astype(jnp.int8)
+    q = jnp.clip(jnp.ceil(xb / scale), -127, 127).astype(jnp.int8)
     return {"q": q, "s": scale.astype(jnp.float32)}
 
 

@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 
+from .sharding import shard_map_compat
+
 _NEG = -1e30
 
 
@@ -86,6 +88,6 @@ def ring_attention(q, k, v, mesh: Mesh, *, seq_axis: str = "model",
     n = mesh.shape[seq_axis]
     local = _make_local(seq_axis, n, causal, scale, unroll=unroll)
     spec = P(tuple(a for a in batch_axes if a), seq_axis, None, None)
-    fn = jax.shard_map(local, mesh=mesh, in_specs=(spec, spec, spec),
-                       out_specs=spec, check_vma=False)
+    fn = shard_map_compat(local, mesh=mesh, in_specs=(spec, spec, spec),
+                          out_specs=spec)
     return fn(q, k, v)

@@ -132,6 +132,29 @@ class Rules:
 REPLICATED = Rules(mesh_axes=(), fsdp=False, tensor=False)
 
 
+def shard_map_compat(f, mesh, in_specs, out_specs,
+                     check_replication: bool = False):
+    """Version-portable ``shard_map`` (the mesh-API analogue of
+    ``repro.kernels.compat``): newer jax spells it ``jax.shard_map`` with
+    ``check_vma``; 0.4.x has ``jax.experimental.shard_map`` with
+    ``check_rep``."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs,
+                             check_vma=check_replication)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_replication)
+
+
+def use_mesh(mesh: Mesh):
+    """Context manager activating ``mesh``: ``jax.set_mesh`` on newer jax;
+    on 0.4.x a ``Mesh`` is itself the context manager."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
+
+
 def rules_for_mesh(mesh: Mesh, **kw) -> Rules:
     return Rules(mesh_axes=tuple(mesh.axis_names), mesh=mesh, **kw)
 

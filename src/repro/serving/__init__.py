@@ -9,17 +9,18 @@ telemetry (``stats``).
 """
 from .batching import (BucketPolicy, POLICIES, pad_to_bucket, padding_waste,
                        stack_requests)
-from .engine import (OPS, PCAServer, ServedEigh, ServedPCA, ServedSVD, Ticket)
+from .engine import (BackendRouter, OPS, PCAServer, ServedEigh, ServedPCA,
+                     ServedSVD, Ticket, threshold_router)
 from .solver import (BatchedEighResult, BatchedPCAResult, BatchedSVDResult,
                      jacobi_eigh_batched, jacobi_svd_batched, pca_fit_batched,
                      pca_transform_batched)
 from .stats import RequestRecord, ServingStats, percentile
 
 __all__ = [
-    "BatchedEighResult", "BatchedPCAResult", "BatchedSVDResult",
-    "BucketPolicy", "OPS", "PCAServer", "POLICIES", "RequestRecord",
-    "ServedEigh", "ServedPCA", "ServedSVD", "ServingStats", "Ticket",
-    "jacobi_eigh_batched", "jacobi_svd_batched", "pad_to_bucket",
+    "BackendRouter", "BatchedEighResult", "BatchedPCAResult",
+    "BatchedSVDResult", "BucketPolicy", "OPS", "PCAServer", "POLICIES",
+    "RequestRecord", "ServedEigh", "ServedPCA", "ServedSVD", "ServingStats",
+    "Ticket", "jacobi_eigh_batched", "jacobi_svd_batched", "pad_to_bucket",
     "padding_waste", "pca_fit_batched", "pca_transform_batched",
-    "percentile", "stack_requests",
+    "percentile", "stack_requests", "threshold_router",
 ]

@@ -33,6 +33,35 @@ from .stats import RequestRecord, ServingStats
 
 OPS = ("eigh", "svd", "pca")
 
+# a backend router maps (op, bucket_shape) -> kernel backend name for that
+# bucket's executable (None = plain XLA matmul datapath); see
+# ``repro.backends`` for the names
+BackendRouter = Callable[[str, Tuple[int, ...]], Optional[str]]
+
+
+def threshold_router(min_dim: int, large: Optional[str] = "auto",
+                     small: Optional[str] = None) -> BackendRouter:
+    """Route big buckets to one backend, small ones to another.
+
+    The ROADMAP "multi-backend dispatch" follow-on: kernel-launch overhead
+    dominates tiny problems (keep them on plain XLA) while large tiles win
+    on the Pallas MM-Engine.  A bucket whose largest dim reaches ``min_dim``
+    routes to ``large``; everything else to ``small``.  ``"auto"`` resolves
+    per host via the registry (``pallas`` on TPU, ``interpret`` elsewhere)
+    so ``threshold_router(128)`` is safe on any machine; ``None`` means the
+    plain XLA matmul datapath.
+    """
+    def resolve(name: Optional[str]) -> Optional[str]:
+        if name == "auto":
+            from repro.backends import default_backend
+            return default_backend()
+        return name
+
+    def route(op: str, bucket: Tuple[int, ...]) -> Optional[str]:
+        del op
+        return resolve(large if max(bucket) >= min_dim else small)
+    return route
+
 
 @dataclasses.dataclass(frozen=True)
 class ServedEigh:
@@ -109,6 +138,11 @@ class PCAServer:
       max_delay_s: default flush deadline for a queued request.
       pad_batches: zero-pad partial flushes up to max_batch so every bucket
         uses a single cached executable (no recompiles on timeout flushes).
+      backend_router: optional (op, bucket) -> backend-name routing so
+        different buckets run on different kernel backends in one server
+        (e.g. ``threshold_router(128)``: big buckets on Pallas, small ones
+        on plain XLA).  Default: every bucket uses ``config.backend``.  The
+        executable cache key is backend-qualified.
       clock: injectable monotonic clock (tests drive deadlines manually).
     """
 
@@ -119,6 +153,7 @@ class PCAServer:
         max_batch: Optional[int] = None,
         max_delay_s: float = 0.01,
         pad_batches: bool = True,
+        backend_router: Optional[BackendRouter] = None,
         clock: Callable[[], float] = time.monotonic,
     ):
         self.config = config
@@ -126,6 +161,7 @@ class PCAServer:
         self.max_batch = max_batch or config.S
         self.max_delay_s = max_delay_s
         self.pad_batches = pad_batches
+        self.backend_router = backend_router
         self.clock = clock
         self.stats = ServingStats(clock=clock)
         self._queues: Dict[Tuple, List[_Pending]] = {}
@@ -197,7 +233,8 @@ class PCAServer:
             n_active = np.concatenate(
                 [n_active, np.zeros((n_active.shape[0], bp - b), np.int32)],
                 axis=1)
-        fn, hit = self._executable(op, bucket, bp)
+        backend = self.backend_for(op, bucket)
+        fn, hit = self._executable(op, bucket, bp, backend)
         out = jax.block_until_ready(fn(jnp.asarray(batch),
                                        *map(jnp.asarray, n_active)))
         t_done = self.clock()
@@ -207,17 +244,24 @@ class PCAServer:
                 rid=e.rid, op=op, shape=e.matrix.shape, bucket=bucket,
                 batch_size=b, cache_hit=hit, t_submit=e.t_submit,
                 t_done=t_done, queue_s=t_flush - e.t_submit,
-                padding_waste=padding_waste(e.matrix.shape, bucket))
+                padding_waste=padding_waste(e.matrix.shape, bucket),
+                backend=backend)
             e.ticket._fulfil(self._unpack(op, out, i, e.matrix.shape), rec)
             self.stats.record_request(rec)
         return b
 
-    def _executable(self, op: str, bucket: Tuple[int, ...],
-                    batch: int) -> Tuple[Callable, bool]:
-        key = (op, bucket, batch, self.config)
+    def backend_for(self, op: str, bucket: Tuple[int, ...]) -> Optional[str]:
+        """The kernel backend this (op, bucket) routes to."""
+        if self.backend_router is not None:
+            return self.backend_router(op, bucket)
+        return self.config.backend
+
+    def _executable(self, op: str, bucket: Tuple[int, ...], batch: int,
+                    backend: Optional[str]) -> Tuple[Callable, bool]:
+        cfg = dataclasses.replace(self.config, backend=backend)
+        key = (op, bucket, batch, cfg)
         hit = key in self._cache
         if not hit:
-            cfg = self.config
             kw = dict(sweeps=cfg.sweeps, pivot=cfg.pivot,
                       rotation=cfg.rotation, angle=cfg.angle, tol=cfg.tol,
                       matmul_fn=cfg.matmul_fn())

@@ -7,6 +7,12 @@ pivot strategies ("parallel" / "cyclic" / "paper") and both rotation modes
 ("rowcol" / "matmul") vmap cleanly: the sweep machinery is pure lax
 control flow and the DLE argmax batches element-wise.
 
+Backend dispatch: every matmul in these solvers flows through the injected
+``matmul_fn`` (or the ``config.backend`` name on ``pca_fit_batched``), which
+``PCAServer`` resolves per bucket via its ``backend_router`` -- so one server
+can retire a large bucket on the Pallas MM-Engine while a small bucket stays
+on plain XLA, each under its own backend-qualified cached executable.
+
 Bucket-padding contract: inputs arrive zero-padded into a shared bucket
 (``serving.batching``) with per-problem true sizes ``n_active``.  The
 zero-pivot guard in ``core.jacobi`` makes every rotation that touches a

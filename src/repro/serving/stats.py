@@ -28,6 +28,8 @@ class RequestRecord:
     t_done: float
     queue_s: float             # time spent waiting before the flush began
     padding_waste: float       # 1 - true_area / bucket_area
+    backend: Optional[str] = None  # kernel backend the bucket routed to
+                                   # (None = plain XLA matmul datapath)
 
     @property
     def latency_s(self) -> float:

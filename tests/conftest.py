@@ -1,11 +1,26 @@
-"""Test-session guards.
+"""Test-session guards + marker registration.
 
 The dry-run isolation contract: ONLY repro.launch.dryrun (and the other
 launch-time scripts) force a 512-device host platform; smoke tests and
 benches must see the single real device.  Multi-device tests run in
 subprocesses (tests/test_distributed.py) that set XLA_FLAGS themselves.
+
+Tiering: ``slow`` marks long-running full-size cases (see pytest.ini);
+the default run is the fast tier (`-m "not slow"` via addopts), which must
+finish in under 5 minutes on CPU.  Every slow case's subsystem keeps
+fast-tier coverage -- through a reduced variant (jamba hybrid, checkpoint
+resume, property sweeps, DLE tilewise, KV rank sweep) or a sibling smoke
+(arctic/whisper forward+decode, the other sharded-parity tests).
 """
 import os
+
+
+def pytest_configure(config):
+    # belt-and-braces: keep the marker registered even if pytest.ini is not
+    # picked up (e.g. running a test file from another rootdir)
+    config.addinivalue_line(
+        "markers", "slow: long-running full-size case (fast variant runs "
+        "by default; opt in with -m slow)")
 
 
 def pytest_sessionstart(session):

@@ -60,9 +60,12 @@ def test_distributed_pca_matches_numpy():
     assert out["err"] < 1e-2
 
 
+@pytest.mark.slow
 def test_sharded_train_step_matches_single_device():
     """2x4 mesh (DP x TP with FSDP) vs single-device: one train step on a
-    reduced dense model must agree."""
+    reduced dense model must agree.  Slow tier: two full train-step
+    compiles in a subprocess; the fast tier keeps the sharded-forward
+    coverage via the MoE/ring/decode tests."""
     out = _run("""
         import dataclasses
         from repro.configs import reduced_config
@@ -144,6 +147,7 @@ def test_moe_shard_map_matches_single_device():
     assert out["aux_sh"] == pytest.approx(out["aux_ref"], rel=1e-3)
 
 
+@pytest.mark.slow
 def test_seq_sharded_decode_matches_replicated():
     out = _run("""
         import dataclasses
@@ -204,9 +208,12 @@ def test_elastic_restore_across_meshes(tmp_path):
     assert out["ok_values"] and out["ok_sharding"] and out["step"] == 3
 
 
+@pytest.mark.slow
 def test_moe_fused_dense_residual_matches_single_device():
     """arctic-style fused (MoE + dense residual in one shard_map psum)
-    against the single-device path."""
+    against the single-device path.  Slow tier: the plain
+    test_moe_shard_map_matches_single_device keeps MoE dispatch covered
+    fast."""
     out = _run("""
         import dataclasses
         from repro.configs import reduced_config
@@ -247,6 +254,7 @@ def test_ring_attention_matches_dense():
     handle without padding)."""
     out = _run("""
         from repro.parallel.ring_attention import ring_attention
+        from repro.parallel.sharding import use_mesh
         from repro.models.attention import _dense_attention
         mesh = jax.make_mesh((2, 4), ("data", "model"))
         rng = np.random.default_rng(0)
@@ -256,7 +264,7 @@ def test_ring_attention_matches_dense():
         v = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32)
         errs = {}
         for causal in (True, False):
-            with jax.set_mesh(mesh):
+            with use_mesh(mesh):
                 o = jax.jit(lambda q, k, v: ring_attention(
                     q, k, v, mesh, causal=causal))(q, k, v)
                 o = jax.device_get(o)
@@ -274,7 +282,7 @@ def test_ring_mode_model_matches_chunked():
         import dataclasses
         from repro.configs import reduced_config
         from repro.models import transformer as tfm
-        from repro.parallel.sharding import REPLICATED, rules_for_mesh
+        from repro.parallel.sharding import REPLICATED, rules_for_mesh, use_mesh
 
         cfg_r = dataclasses.replace(reduced_config("qwen1.5-32b"), tp=4,
                                     n_layers=2, attn_impl="ring")
@@ -285,7 +293,7 @@ def test_ring_mode_model_matches_chunked():
         rng = np.random.default_rng(0)
         batch = {"tokens": jnp.asarray(
             rng.integers(0, cfg_r.vocab_size, (4, 32)), jnp.int32)}
-        with jax.set_mesh(mesh):
+        with use_mesh(mesh):
             lr = jax.device_get(jax.jit(lambda p, b: tfm.forward(
                 p, b, cfg_r, rules, "train")[0])(params, batch))
         cfg_c = dataclasses.replace(cfg_r, tp=1, attn_impl="chunked")
@@ -301,6 +309,7 @@ def test_ring_attention_gqa_rotates_true_kv():
     attention with expanded KV."""
     out = _run("""
         from repro.parallel.ring_attention import ring_attention
+        from repro.parallel.sharding import use_mesh
         from repro.models.attention import _dense_attention
         mesh = jax.make_mesh((2, 4), ("data", "model"))
         rng = np.random.default_rng(1)
@@ -308,7 +317,7 @@ def test_ring_attention_gqa_rotates_true_kv():
         q = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32)
         k = jnp.asarray(rng.standard_normal((B, S, KV, D)), jnp.float32)
         v = jnp.asarray(rng.standard_normal((B, S, KV, D)), jnp.float32)
-        with jax.set_mesh(mesh):
+        with use_mesh(mesh):
             o = jax.jit(lambda q, k, v: ring_attention(
                 q, k, v, mesh, causal=True))(q, k, v)
             o = jax.device_get(o)

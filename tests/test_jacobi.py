@@ -105,9 +105,7 @@ def test_jacobi_svd():
 # hypothesis property tests
 # ---------------------------------------------------------------------------
 
-@settings(max_examples=20, deadline=None)
-@given(n=st.integers(3, 20), seed=st.integers(0, 2 ** 16))
-def test_property_invariants(n, seed):
+def _invariants_case(n, seed):
     c = jnp.asarray(_sym(n, seed))
     res = jacobi_eigh(c, sweeps=14)
     v = np.asarray(res.eigenvectors)
@@ -122,6 +120,19 @@ def test_property_invariants(n, seed):
     # trace preserved by similarity transforms
     np.testing.assert_allclose(w.sum(), np.trace(np.asarray(c)), rtol=1e-4,
                                atol=1e-3)
+
+
+@settings(max_examples=4, deadline=None)
+@given(n=st.integers(3, 20), seed=st.integers(0, 2 ** 16))
+def test_property_invariants_fast(n, seed):
+    _invariants_case(n, seed)
+
+
+@pytest.mark.slow
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(3, 20), seed=st.integers(0, 2 ** 16))
+def test_property_invariants(n, seed):
+    _invariants_case(n, seed)
 
 
 @settings(max_examples=10, deadline=None)

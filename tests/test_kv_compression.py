@@ -29,18 +29,27 @@ def test_exact_for_truly_lowrank_cache():
     assert ratio == 8 / 32
 
 
-def test_error_decreases_with_rank():
+def _rank_sweep_errs(ranks):
     k = _lowrank_cache(1, 96, 2, 32, r_true=12, seed=4, noise=0.05)
     v = _lowrank_cache(1, 96, 2, 32, r_true=12, seed=5, noise=0.05)
     q = jnp.asarray(np.random.default_rng(6).standard_normal((1, 2, 3, 32)),
                     jnp.float32)
     errs = []
-    for r in (2, 8, 16, 32):
+    for r in ranks:
         e, _ = kvc.attention_error(q, k, v,
                                    kvc.KVCompressionConfig(rank=r), 0.18)
         errs.append(float(e))
     assert errs[-1] < 1e-3              # full rank = exact
     assert all(b <= a + 1e-6 for a, b in zip(errs, errs[1:]))
+
+
+def test_error_decreases_with_rank_fast():
+    _rank_sweep_errs((2, 32))
+
+
+@pytest.mark.slow
+def test_error_decreases_with_rank():
+    _rank_sweep_errs((2, 8, 16, 32))
 
 
 def test_suggest_rank_finds_true_rank():

@@ -69,20 +69,26 @@ def test_transform_shape_and_centering():
     np.testing.assert_allclose(np.asarray(out).mean(0), 0.0, atol=1e-3)
 
 
+def _dle_tilewise_case(n, t, rng):
+    c = rng.standard_normal((n, n)).astype(np.float32)
+    c = c + c.T
+    a = find_pivot(jnp.asarray(c))
+    b = find_pivot_tilewise(jnp.asarray(c), t)
+    assert abs(float(a.apq)) == pytest.approx(abs(float(b.apq)))
+
+
+def test_dle_tilewise_matches_flat_fast():
+    _dle_tilewise_case(32, 8, np.random.default_rng(11))
+
+
+@pytest.mark.slow
 def test_dle_tilewise_matches_flat():
     rng = np.random.default_rng(11)
     for n, t in ((32, 8), (50, 16), (64, 64)):
-        c = rng.standard_normal((n, n)).astype(np.float32)
-        c = c + c.T
-        a = find_pivot(jnp.asarray(c))
-        b = find_pivot_tilewise(jnp.asarray(c), t)
-        assert abs(float(a.apq)) == pytest.approx(abs(float(b.apq)))
+        _dle_tilewise_case(n, t, rng)
 
 
-@settings(max_examples=15, deadline=None)
-@given(m=st.integers(20, 100), d=st.integers(2, 12),
-       seed=st.integers(0, 1000))
-def test_property_pca(m, d, seed):
+def _property_pca_case(m, d, seed):
     rng = np.random.default_rng(seed)
     x = rng.standard_normal((m, d)).astype(np.float32)
     res = fit(x, PCAConfig(T=16, sweeps=12))
@@ -95,3 +101,18 @@ def test_property_pca(m, d, seed):
     assert abs(evcr.sum() - 1.0) < 1e-4
     v = np.asarray(res.components)
     np.testing.assert_allclose(v.T @ v, np.eye(d), atol=1e-3)
+
+
+@settings(max_examples=4, deadline=None)
+@given(m=st.integers(20, 100), d=st.integers(2, 12),
+       seed=st.integers(0, 1000))
+def test_property_pca_fast(m, d, seed):
+    _property_pca_case(m, d, seed)
+
+
+@pytest.mark.slow
+@settings(max_examples=15, deadline=None)
+@given(m=st.integers(20, 100), d=st.integers(2, 12),
+       seed=st.integers(0, 1000))
+def test_property_pca(m, d, seed):
+    _property_pca_case(m, d, seed)

@@ -52,7 +52,9 @@ def test_pad_and_stack():
 # batched solvers vs the per-matrix path
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("pivot", ["parallel", "cyclic", "paper"])
+@pytest.mark.parametrize("pivot", [
+    "parallel", "cyclic",
+    pytest.param("paper", marks=pytest.mark.slow)])  # 30-sweep DLE solve
 def test_eigh_batched_matches_loop(pivot):
     mats = [_sym(12, seed=i) for i in range(4)]
     sweeps = 30 if pivot == "paper" else 12

@@ -37,19 +37,30 @@ def test_training_with_compression_converges():
     assert losses[-1] < losses[0] - 0.4
 
 
+@pytest.mark.slow
 def test_checkpoint_resume_is_exact(tmp_path):
     """Train 10 steps straight vs 5 + resume + 5: identical final loss
     (deterministic pipeline + saved cursor)."""
+    _resume_roundtrip(tmp_path, steps=10, preempt_at=5)
+
+
+def test_checkpoint_resume_is_exact_fast(tmp_path):
+    """Reduced variant of the resume test: 4 = 2 + 2 steps."""
+    _resume_roundtrip(tmp_path, steps=4, preempt_at=2)
+
+
+def _resume_roundtrip(tmp_path, steps: int, preempt_at: int):
     from repro.launch import train as train_mod
     base = ["--arch", "olmo-1b", "--reduced", "--global-batch", "4",
             "--seq-len", "32", "--lr", "5e-3", "--log-every", "100"]
-    straight = train_mod.main(base + ["--steps", "10"])
+    straight = train_mod.main(base + ["--steps", str(steps)])
 
     ck = str(tmp_path / "ck")
-    # same schedule (--steps 10), preempted after 5 steps
-    train_mod.main(base + ["--steps", "10", "--ckpt-dir", ck,
-                           "--ckpt-every", "100", "--preempt-at", "5"])
-    resumed = train_mod.main(base + ["--steps", "10", "--ckpt-dir", ck,
+    # same schedule (--steps N), preempted partway
+    train_mod.main(base + ["--steps", str(steps), "--ckpt-dir", ck,
+                           "--ckpt-every", "100",
+                           "--preempt-at", str(preempt_at)])
+    resumed = train_mod.main(base + ["--steps", str(steps), "--ckpt-dir", ck,
                                      "--ckpt-every", "100"])
     assert straight[-1] == pytest.approx(resumed[-1], rel=1e-4)
 
