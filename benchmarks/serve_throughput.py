@@ -6,30 +6,56 @@ serve-one-at-a-time baseline (every request its own dispatch); batched rows
 must clear >2x its requests/s to demonstrate the S-array axis paying off in
 software.  Also emits ``BENCH_serve_throughput.json`` for the perf
 trajectory.
+
+The sharded sweep axis (``sharded_rows``) holds the flush size fixed and
+sweeps the device-mesh size: one large bucket, ``MeshExecutor`` over
+1/2/4/8 host devices.  It always runs in a subprocess that forces
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the
+``tests/test_distributed.py`` recipe), so the per-device-count rows mean
+the same thing on a laptop, in either CI matrix job, or next to a real
+accelerator -- the comparison ``scripts/check_bench.py`` gates on never
+mixes device-visibility regimes.
 """
 from __future__ import annotations
 
+import json
+import os
+import subprocess
+import sys
 import time
 
 from repro.core import PCAConfig
 from repro.launch.serve_pca import mixed_traffic
-from repro.serving import BucketPolicy, PCAServer, threshold_router
+from repro.serving import (BucketPolicy, LocalExecutor, MeshExecutor,
+                           PCAServer, host_mesh, threshold_router)
 
-from .common import emit, emit_json
+from .common import REPO_ROOT, emit, emit_json
 
 MIXED_DIMS = (10, 14, 18, 24, 29, 31, 37, 46)
 
+# sharded sweep: one large bucket (dim 46 -> 48 under T=16), fixed flush
+# size, device count as the only axis
+SHARDED_DIM = 46
+SHARDED_FLUSH = 64
+SHARDED_DEVICE_COUNTS = (1, 2, 4, 8)
+
 
 def _measure(mats, T: int, S: int, mode: str, sweeps: int = 10,
-             backend_router=None):
+             backend_router=None, executor=None, max_batch=None,
+             reps: int = 3):
     srv = PCAServer(PCAConfig(T=T, S=S, sweeps=sweeps),
                     policy=BucketPolicy(T=T, mode=mode), max_delay_s=10.0,
-                    backend_router=backend_router)
+                    backend_router=backend_router, executor=executor,
+                    max_batch=max_batch)
     srv.solve_many(mats)            # warmup: compile every bucket executable
-    srv.stats.reset()
-    t0 = time.perf_counter()
-    srv.solve_many(mats)
-    wall = time.perf_counter() - t0
+    # best-of-reps: scheduler noise only ever slows a pass down, and the
+    # check_bench regression gate needs run-to-run stability
+    wall = float("inf")
+    for _ in range(reps):
+        srv.stats.reset()
+        t0 = time.perf_counter()
+        srv.solve_many(mats)
+        wall = min(wall, time.perf_counter() - t0)
     s = srv.stats.summary()
     return {
         "T": T, "S": S, "policy": mode,
@@ -44,7 +70,62 @@ def _measure(mats, T: int, S: int, mode: str, sweeps: int = 10,
     }
 
 
+def sharded_sweep() -> list:
+    """Per-device-count rows for one large bucket at a fixed flush size.
+
+    Must run under ``--xla_force_host_platform_device_count=8`` (or with 8
+    real devices); device counts beyond what is visible are dropped.  The
+    n_devices=1 row is the single-device ``LocalExecutor`` flush of the
+    same ``SHARDED_FLUSH``-request batch, so each row answers "what did
+    sharding this exact flush across n devices buy?".
+    """
+    import jax
+
+    mats = mixed_traffic(SHARDED_FLUSH, "eigh", (SHARDED_DIM,))
+    rows = []
+    base_rps = None
+    for n_dev in SHARDED_DEVICE_COUNTS:
+        if n_dev > jax.device_count():
+            break
+        ex = (MeshExecutor(mesh=host_mesh(n_dev)) if n_dev > 1
+              else LocalExecutor())
+        row = _measure(mats, T=16, S=SHARDED_FLUSH, mode="tile",
+                       executor=ex, max_batch=SHARDED_FLUSH)
+        row["n_devices"] = n_dev
+        row["flush_batch"] = SHARDED_FLUSH
+        if n_dev == 1:
+            base_rps = row["requests_per_s"]
+        row["speedup_vs_1dev"] = (row["requests_per_s"] / base_rps
+                                  if base_rps else float("nan"))
+        rows.append(row)
+    return rows
+
+
+def sharded_sweep_subprocess() -> list:
+    """Run ``sharded_sweep`` in a child that forces 8 host devices.
+
+    XLA fixes the device count at backend init, so an already-started
+    single-device process cannot grow a mesh; the subprocess both makes the
+    sweep runnable from anywhere and pins the rows to one device-visibility
+    regime.
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = (str(REPO_ROOT / "src") + os.pathsep
+                         + str(REPO_ROOT))
+    prog = ("import json; from benchmarks.serve_throughput import "
+            "sharded_sweep; print(json.dumps(sharded_sweep()))")
+    r = subprocess.run([sys.executable, "-c", prog], capture_output=True,
+                       text=True, env=env, timeout=1200, cwd=REPO_ROOT)
+    if r.returncode != 0:
+        raise RuntimeError(f"sharded sweep subprocess failed:\n"
+                           f"{r.stderr[-4000:]}")
+    return json.loads(r.stdout.strip().splitlines()[-1])
+
+
 def run(fast: bool = True) -> None:
+    import jax
+
     n_req = 32 if fast else 128
     mats = mixed_traffic(n_req, "eigh", MIXED_DIMS)
     grid = [(16, 1, "tile"),            # serve-one-at-a-time baseline
@@ -57,6 +138,13 @@ def run(fast: bool = True) -> None:
     baseline_rps = None
     for T, S, mode in grid:
         row = _measure(mats, T, S, mode)
+        # part of the row's *identity* for scripts/check_bench.py: grid
+        # timings measured under different device splits (the mesh-8 CI
+        # job carves the CPU into 8 host devices) are not comparable, so
+        # rows only match within one device-visibility regime.  The
+        # sharded rows pin their regime by construction (subprocess with
+        # forced host-device count).
+        row["device_count"] = jax.device_count()
         if S == 1:
             baseline_rps = row["requests_per_s"]
         row["speedup_vs_serial"] = (row["requests_per_s"] / baseline_rps
@@ -72,12 +160,28 @@ def run(fast: bool = True) -> None:
     best = max(r["speedup_vs_serial"] for r in rows if r["S"] >= 4)
     emit("serve_best_batched_speedup", f"{best:.2f}",
          "acceptance: >2x vs serve-one-at-a-time")
+
+    sharded_rows = sharded_sweep_subprocess()
+    for row in sharded_rows:
+        emit(f"serve_sharded_{row['n_devices']}dev",
+             f"{row['us_per_request']:.1f}",
+             f"rps={row['requests_per_s']:.1f}"
+             f";speedup_vs_1dev={row['speedup_vs_1dev']:.2f}")
+    sharded_best = (max(r["speedup_vs_1dev"] for r in sharded_rows)
+                    if sharded_rows else float("nan"))
+    emit("serve_sharded_best_speedup", f"{sharded_best:.2f}",
+         "acceptance: >=2x at 8 host devices vs 1 (large bucket)")
+
     emit_json("serve_throughput", {
         "n_requests": n_req,
         "mixed_dims": list(MIXED_DIMS),
         "baseline_requests_per_s": baseline_rps,
         "best_batched_speedup": best,
         "rows": rows,
+        "sharded_dim": SHARDED_DIM,
+        "sharded_flush": SHARDED_FLUSH,
+        "sharded_best_speedup": sharded_best,
+        "sharded_rows": sharded_rows,
     })
 
 

@@ -1,0 +1,166 @@
+#!/usr/bin/env python
+"""Perf-regression gate: fresh BENCH_*.json vs the committed copies.
+
+The BENCH_*.json files at the repo root are the perf trajectory -- each PR
+commits the numbers its benchmarks measured.  Until now nothing *enforced*
+the trajectory; this script does: after CI re-runs a benchmark (emitting a
+fresh JSON over the committed one), it diffs every row of the fresh file
+against the committed copy (``git show HEAD:<file>``) and fails on a
+throughput regression beyond the tolerance.
+
+Rows are matched by their identity fields (strings, bools and ints --
+T/S/policy/backend/n_devices/...), and compared on their throughput metric:
+``requests_per_s`` (higher is better) when present, else the first
+``*_us``/``us_per_*`` field (lower is better).  Rows present on only one
+side are reported but never fail the gate -- a benchmark may legitimately
+emit fewer rows in a reduced environment (e.g. the single-device CI job
+skips the multi-device sweep) or grow new rows in the PR under test.
+
+A file whose content is byte-identical to HEAD was not re-emitted this run
+and is skipped.  The tolerance (default 25% from the CI issue) can be
+loosened for noisy hosts with ``--tol 0.4`` or ``CHECK_BENCH_TOL=0.4``.
+
+Exit codes: 0 ok / nothing comparable, 1 regression, 2 usage error.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import pathlib
+import subprocess
+import sys
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+# (metric, higher_is_better) probed in order; first hit wins
+METRIC_PREFERENCE = (
+    ("requests_per_s", True),
+    ("us_per_request", False),
+    ("mm_engine_us", False),
+    ("dle_scan_us", False),
+    ("us_per_call", False),
+)
+
+
+def row_key(row: dict):
+    """Identity of a row: every non-float field, sorted for determinism."""
+    return tuple(sorted(
+        (k, v) for k, v in row.items()
+        if isinstance(v, (str, bool)) or (isinstance(v, int)
+                                          and not isinstance(v, bool))))
+
+
+def row_metric(row: dict, also_in: dict = None):
+    """Throughput metric of ``row``; with ``also_in``, the first metric
+    both rows carry (a row may grow a preferred metric the committed copy
+    predates -- comparison needs a common one)."""
+    for name, higher in METRIC_PREFERENCE:
+        if isinstance(row.get(name), (int, float)) and (
+                also_in is None
+                or isinstance(also_in.get(name), (int, float))):
+            return name, float(row[name]), higher
+    return None
+
+
+def iter_rows(doc: dict):
+    """Every (section, row) of a BENCH doc: any top-level list of dicts."""
+    for section, val in sorted(doc.items()):
+        if isinstance(val, list) and all(isinstance(r, dict) for r in val):
+            for row in val:
+                yield section, row
+
+
+def committed_copy(name: str) -> str | None:
+    r = subprocess.run(["git", "show", f"HEAD:{name}"], cwd=REPO_ROOT,
+                       capture_output=True, text=True)
+    return r.stdout if r.returncode == 0 else None
+
+
+def compare_file(name: str, tol: float) -> tuple[list, bool]:
+    """Returns (report lines, ok)."""
+    fresh_path = REPO_ROOT / name
+    if not fresh_path.exists():
+        return [f"{name}: absent from working tree; skipped"], True
+    base_text = committed_copy(name)
+    if base_text is None:
+        return [f"{name}: not in HEAD (new benchmark); skipped"], True
+    fresh_text = fresh_path.read_text()
+    if fresh_text == base_text:
+        return [f"{name}: identical to HEAD (not re-emitted); skipped"], True
+    base_rows = {}
+    for section, row in iter_rows(json.loads(base_text)):
+        base_rows[(section, row_key(row))] = row
+
+    lines, ok, compared = [], True, 0
+    for section, row in iter_rows(json.loads(fresh_text)):
+        key = (section, row_key(row))
+        ident = ", ".join(f"{k}={v}" for k, v in key[1]) or "<no id>"
+        base = base_rows.pop(key, None)
+        if base is None:
+            lines.append(f"  NEW     {section}[{ident}]")
+            continue
+        metric = row_metric(row, also_in=base)
+        if metric is None:
+            lines.append(f"  NOMETRIC {section}[{ident}]")
+            continue
+        mname, fresh_v, higher = metric
+        base_v = float(base[mname])
+        if base_v <= 0:
+            continue
+        compared += 1
+        # delta > 0 is always an improvement, < 0 a regression
+        delta = ((fresh_v - base_v) / base_v if higher
+                 else (base_v - fresh_v) / base_v)
+        verdict = "ok"
+        if delta < -tol:
+            verdict = "REGRESSION"
+            ok = False
+        lines.append(
+            f"  {verdict:<10} {section}[{ident}] {mname}: "
+            f"{base_v:.1f} -> {fresh_v:.1f} ({delta * 100:+.1f}%)")
+    for (section, key), _ in sorted(base_rows.items()):
+        ident = ", ".join(f"{k}={v}" for k, v in key) or "<no id>"
+        lines.append(f"  MISSING {section}[{ident}] (not emitted this run)")
+    header = (f"{name}: {compared} rows compared, tolerance "
+              f"{tol * 100:.0f}%")
+    return [header] + lines, ok
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("files", nargs="*",
+                    help="BENCH_*.json names (default: every tracked one)")
+    ap.add_argument("--tol", type=float,
+                    default=float(os.environ.get("CHECK_BENCH_TOL", "0.25")),
+                    help="allowed fractional throughput regression "
+                         "(default 0.25, env CHECK_BENCH_TOL)")
+    args = ap.parse_args(argv)
+    if args.tol < 0:
+        ap.error("--tol must be >= 0")
+
+    names = args.files
+    if not names:
+        r = subprocess.run(["git", "ls-files", "BENCH_*.json"],
+                           cwd=REPO_ROOT, capture_output=True, text=True)
+        if r.returncode != 0:
+            print("check_bench: git unavailable and no files given",
+                  file=sys.stderr)
+            return 2
+        names = r.stdout.split()
+    if not names:
+        print("check_bench: no BENCH_*.json files to compare")
+        return 0
+
+    all_ok = True
+    for name in names:
+        lines, ok = compare_file(name, args.tol)
+        print("\n".join(lines))
+        all_ok = all_ok and ok
+    print("check_bench:", "OK" if all_ok else "FAILED (throughput "
+          "regression beyond tolerance; see REGRESSION rows above)")
+    return 0 if all_ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

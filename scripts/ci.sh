@@ -2,11 +2,18 @@
 # CI entry point.  Order:
 #   1. resolved-API banner  -- which Pallas compiler-params spelling and
 #      which kernel backends this host resolves to (version drift shows up
-#      here first, not as 28 cryptic kernel failures)
-#   2. serving smoke        -- submit -> bucket -> batch -> cache -> unpack
+#      here first, not as 28 cryptic kernel failures), plus
+#      jax.device_count() and the mesh shape the sharded smoke will
+#      resolve to (device-visibility drift shows up in the log header
+#      instead of as parity failures)
+#   2. serving smoke        -- submit -> bucket -> batch -> cache -> unpack,
+#      including a sharded-flush parity leg over every visible device
 #   3. backend-sweep smoke  -- one sweep point: a router splits two buckets
 #      across two kernel backends in one server, verified against numpy
-#   4. tier-1 tests         -- fast tier by default (pytest.ini deselects
+#   4. perf-regression gate -- re-emit BENCH_serve_throughput.json and diff
+#      it against the committed copy (scripts/check_bench.py; fails on
+#      >25% throughput regression).  Runs regardless of --slow.
+#   5. tier-1 tests         -- fast tier by default (pytest.ini deselects
 #      `slow`); MUST be zero failures, enforced by the pytest exit code
 #      under `set -e`.  `scripts/ci.sh --slow` appends the slow tier.
 set -euo pipefail
@@ -16,10 +23,15 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 echo "== resolved accelerator API =="
 python - <<'EOF'
+import jax
 from repro.kernels import compat
 from repro import backends
+from repro.serving import mesh_executor
 print(compat.describe())
 print(backends.describe())
+print(f"devices: jax.device_count()={jax.device_count()} "
+      f"({jax.default_backend()})")
+print(f"sharded smoke resolves to: {mesh_executor('auto').describe()}")
 EOF
 
 echo "== serving smoke (serve_pca --selftest) =="
@@ -27,6 +39,18 @@ python -m repro.launch.serve_pca --selftest
 
 echo "== backend-sweep smoke (serve_throughput --selftest) =="
 python -m benchmarks.serve_throughput --selftest
+
+echo "== perf-regression gate (serve_throughput + check_bench) =="
+# single-device regime only: grid rows from a multi-device process carry a
+# different device_count identity and can never match the committed file,
+# and the sharded rows are regime-pinned in a subprocess, so the
+# single-device job already gates everything this job could.
+if [[ "$(python -c 'import jax; print(jax.device_count())')" == "1" ]]; then
+    python -m benchmarks.serve_throughput
+    python scripts/check_bench.py
+else
+    echo "skipped: multi-device regime (gated by the single-device job)"
+fi
 
 echo "== tier-1 tests (fast tier; zero failures required) =="
 python -m pytest -x -q

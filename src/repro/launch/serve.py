@@ -43,7 +43,7 @@ def main(argv=None):
 
     cfg = (reduced_config(args.arch) if args.reduced
            else get_config(args.arch))
-    mesh = pick_mesh(args.model_parallel)
+    mesh = pick_mesh(args.model_parallel, global_batch=args.batch)
     cfg = dataclasses.replace(cfg, tp=mesh.shape["model"])
     rules = rules_for_mesh(mesh)
 

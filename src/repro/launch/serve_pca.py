@@ -9,7 +9,13 @@ CPU demo:
   PYTHONPATH=src python -m repro.launch.serve_pca --requests 32 --op eigh \
       --max-batch 4 --bucket-policy tile --tile 16
 
-CI smoke (exercises submit/flush/cache + checks results against numpy):
+Sharded across a device mesh (one flush retires max-batch requests,
+max-batch / n_devices per device):
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
+      python -m repro.launch.serve_pca --mesh 8 --max-batch 32
+
+CI smoke (exercises submit/flush/cache + checks results against numpy;
+includes a sharded-flush parity leg over every visible device):
   PYTHONPATH=src python -m repro.launch.serve_pca --selftest
 """
 from __future__ import annotations
@@ -22,7 +28,7 @@ import numpy as np
 
 from repro.core import PCAConfig
 from repro.core.memory_model import VIRTEX_US
-from repro.serving import BucketPolicy, PCAServer, POLICIES
+from repro.serving import BucketPolicy, PCAServer, POLICIES, mesh_executor
 
 
 def mixed_traffic(n_req: int, op: str, dims, seed: int = 0):
@@ -62,8 +68,23 @@ def selftest() -> int:
     summary = srv.stats.summary()
     assert summary["cache_hit_rate"] == 1.0, summary
     assert summary["mean_batch"] == 4.0, summary
+
+    # sharded leg: the same eigh traffic through a mesh over every visible
+    # device must match numpy too (degrades to a 1-device mesh gracefully)
+    ex = mesh_executor("auto")
+    sharded = PCAServer(PCAConfig(T=8, S=4, sweeps=14),
+                        policy=BucketPolicy(T=8), max_delay_s=10.0,
+                        executor=ex)
+    for m, r in zip(mats, sharded.solve_many(mats, op="eigh")):
+        ref = np.linalg.eigh(m)[0][::-1]
+        np.testing.assert_allclose(r.eigenvalues, ref, rtol=1e-3, atol=1e-3)
+    shards = {r.n_shards for r in sharded.stats.records}
+    assert shards == {ex.n_shards}, shards
+
     print("serve_pca selftest ok:",
           json.dumps({k: round(v, 4) for k, v in summary.items()}))
+    print("serve_pca sharded selftest ok:", json.dumps({
+        "executor": ex.describe(), "n_shards": ex.n_shards}))
     return 0
 
 
@@ -78,6 +99,13 @@ def main(argv=None) -> int:
     ap.add_argument("--max-batch", type=int, default=4,
                     help="microbatch size (paper S)")
     ap.add_argument("--bucket-policy", default="tile", choices=POLICIES)
+    ap.add_argument("--mesh", default="none",
+                    help="shard each flush's batch axis across a device "
+                         "mesh: 'none' (single device, default), 'auto' "
+                         "(every visible device), or an integer N (first N "
+                         "devices; clamps to what is visible).  Use "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count=8 "
+                         "to carve host devices out of one CPU.")
     ap.add_argument("--timeout-ms", type=float, default=10.0,
                     help="flush deadline per queued request")
     ap.add_argument("--sweeps", type=int, default=12)
@@ -91,10 +119,12 @@ def main(argv=None) -> int:
 
     dims = [int(d) for d in args.dims.split(",")]
     config = PCAConfig(T=args.tile, S=args.max_batch, sweeps=args.sweeps)
+    executor = mesh_executor(args.mesh)
     srv = PCAServer(config, policy=BucketPolicy(T=args.tile,
                                                 mode=args.bucket_policy),
                     max_batch=args.max_batch,
-                    max_delay_s=args.timeout_ms / 1e3)
+                    max_delay_s=args.timeout_ms / 1e3,
+                    executor=executor)
     mats = mixed_traffic(args.requests, args.op, dims, args.seed)
     srv.solve_many(mats, op=args.op)       # warmup: compile the buckets
     srv.stats.reset()
@@ -106,7 +136,8 @@ def main(argv=None) -> int:
         "op": args.op,
         "config": {"T": args.tile, "S": args.max_batch,
                    "policy": args.bucket_policy,
-                   "timeout_ms": args.timeout_ms},
+                   "timeout_ms": args.timeout_ms,
+                   "executor": executor.describe()},
         "summary": summary,
         "fabric_model": {
             "reference": "MANOJAVAM(16,32)@Virtex-US+",

@@ -55,7 +55,7 @@ def main(argv=None):
 
     cfg = (reduced_config(args.arch) if args.reduced
            else get_config(args.arch))
-    mesh = pick_mesh(args.model_parallel)
+    mesh = pick_mesh(args.model_parallel, global_batch=args.global_batch)
     cfg = dataclasses.replace(cfg, tp=mesh.shape["model"])
     shape = ShapeCell("cli", args.seq_len, args.global_batch, "train")
     opt_cfg = adamw.AdamWConfig(lr=args.lr, moment_dtype=args.moments,

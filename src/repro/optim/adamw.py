@@ -160,13 +160,20 @@ def update(grads, state: OptState, params, cfg: AdamWConfig
 
 def moment_axes(param_axes_tree, cfg: AdamWConfig, which: str = "v"):
     """Sharding roles for a moment tree (mirrors the params; int8 v adds
-    the block-scale leaves)."""
+    the block-scale leaves).
+
+    Quantisation reshapes the param's last dim into (blocks, _QBLOCK), so
+    the last dim's role no longer describes either new dim -- the block
+    count can even be 1 (last dim <= _QBLOCK), which any shard spec larger
+    than 1 would reject at dispatch.  Both new dims are therefore
+    replicated; roles on the untouched leading dims carry over.
+    """
     if cfg.moment_dtype != "int8" or which == "m":
         return param_axes_tree
 
     def expand(ax):
         ax = tuple(ax)
-        return {"q": ax + (None,), "s": ax + (None,)}
+        return {"q": ax[:-1] + (None, None), "s": ax[:-1] + (None, None)}
 
     from repro.parallel.sharding import is_axes
     return jax.tree.map(expand, param_axes_tree, is_leaf=is_axes)

@@ -159,5 +159,20 @@ def rules_for_mesh(mesh: Mesh, **kw) -> Rules:
     return Rules(mesh_axes=tuple(mesh.axis_names), mesh=mesh, **kw)
 
 
+def batch_axes(tree):
+    """Role-annotation tree for batch-leading pytrees: leading dim "batch",
+    everything else replicated.
+
+    The solver-pytree counterpart of ``Px`` annotations on parameters: the
+    serving executors feed the result straight into ``Rules.spec_tree`` /
+    ``Rules.sharding_tree`` to get per-leaf ``P(("data",), None, ...)``
+    in/out shardings for the batched Jacobi/PCA solvers, whose every leaf
+    (inputs, eigenpairs, moments, off-norms) carries the microbatch S axis
+    first.  Accepts arrays or ``ShapeDtypeStruct``s (``jax.eval_shape``
+    output trees work directly)."""
+    return jax.tree.map(
+        lambda x: ("batch",) + (None,) * (getattr(x, "ndim", 0) - 1), tree)
+
+
 def pad_to_multiple(n: int, m: int) -> int:
     return n + (-n) % m

@@ -16,14 +16,25 @@ import jax
 from repro.checkpoint import checkpointer
 
 
-def pick_mesh(model_parallel: int, devices=None):
-    """Largest (data, model) mesh over the available devices."""
+def pick_mesh(model_parallel: int, devices=None, global_batch=None):
+    """Largest (data, model) mesh over the available devices.
+
+    ``global_batch`` caps the data axis: batch-dim sharding needs
+    ``global_batch % dp == 0``, so dp shrinks to the largest divisor of the
+    batch that the devices support (a reduced 4-sample smoke on an 8-device
+    host gets a (4, tp) mesh and leaves the surplus devices idle, instead
+    of failing the divisibility check at dispatch).
+    """
     devices = devices if devices is not None else jax.devices()
     n = len(devices)
     tp = model_parallel
     while tp > 1 and (n % tp or model_parallel % tp):
         tp -= 1
     dp = n // tp
+    if global_batch is not None:
+        dp = min(dp, global_batch)
+        while dp > 1 and global_batch % dp:
+            dp -= 1
     return jax.make_mesh((dp, tp), ("data", "model"),
                          devices=devices[: dp * tp])
 

@@ -5,22 +5,29 @@ heterogeneous requests are padded into T-multiple shape buckets
 (``batching``), up to S same-bucket requests stack into one vmapped device
 batch (``solver``), and ``engine.PCAServer`` runs the queue with
 deadline-aware microbatching, a compiled-executable cache, and full
-telemetry (``stats``).
+telemetry (``stats``).  Flush placement is an executor (``sharded``): the
+default ``LocalExecutor`` runs on one device; ``MeshExecutor`` shards the
+batch axis across a named device mesh so one flush retires S x n_devices
+requests.
 """
 from .batching import (BucketPolicy, POLICIES, pad_to_bucket, padding_waste,
                        stack_requests)
 from .engine import (BackendRouter, OPS, PCAServer, ServedEigh, ServedPCA,
                      ServedSVD, Ticket, threshold_router)
+from .sharded import LocalExecutor, MeshExecutor, host_mesh, mesh_executor
 from .solver import (BatchedEighResult, BatchedPCAResult, BatchedSVDResult,
-                     jacobi_eigh_batched, jacobi_svd_batched, pca_fit_batched,
+                     build_solver_fn, jacobi_eigh_batched,
+                     jacobi_svd_batched, pca_fit_batched,
                      pca_transform_batched)
 from .stats import RequestRecord, ServingStats, percentile
 
 __all__ = [
     "BackendRouter", "BatchedEighResult", "BatchedPCAResult",
-    "BatchedSVDResult", "BucketPolicy", "OPS", "PCAServer", "POLICIES",
-    "RequestRecord", "ServedEigh", "ServedPCA", "ServedSVD", "ServingStats",
-    "Ticket", "jacobi_eigh_batched", "jacobi_svd_batched", "pad_to_bucket",
-    "padding_waste", "pca_fit_batched", "pca_transform_batched",
-    "percentile", "stack_requests", "threshold_router",
+    "BatchedSVDResult", "BucketPolicy", "LocalExecutor", "MeshExecutor",
+    "OPS", "PCAServer", "POLICIES", "RequestRecord", "ServedEigh",
+    "ServedPCA", "ServedSVD", "ServingStats", "Ticket", "build_solver_fn",
+    "host_mesh", "jacobi_eigh_batched", "jacobi_svd_batched",
+    "mesh_executor", "pad_to_bucket", "padding_waste", "pca_fit_batched",
+    "pca_transform_batched", "percentile", "stack_requests",
+    "threshold_router",
 ]

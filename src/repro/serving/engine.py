@@ -14,6 +14,12 @@ The engine is synchronous and clock-injectable: callers drive time via
 ``submit``/``poll``/``drain``, which makes deadline behavior deterministic
 under test and keeps the design open for an async device-stream front-end
 (see ROADMAP follow-ons).
+
+Where a flush *runs* is the executor's business (``sharded``): the default
+``LocalExecutor`` is the single-device path; ``MeshExecutor`` shards the
+batch axis across a device mesh so one flush retires S x n_devices
+requests.  The engine only asks the executor to round the batch, compile
+the solver, and run it -- queueing/bucketing/deadlines never see devices.
 """
 from __future__ import annotations
 
@@ -23,12 +29,10 @@ import time
 from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
-import jax
-import jax.numpy as jnp
 
 from repro.core.pca import PCAConfig
 from .batching import BucketPolicy, padding_waste, stack_requests
-from .solver import jacobi_eigh_batched, jacobi_svd_batched, pca_fit_batched
+from .sharded import LocalExecutor
 from .stats import RequestRecord, ServingStats
 
 OPS = ("eigh", "svd", "pca")
@@ -50,6 +54,13 @@ def threshold_router(min_dim: int, large: Optional[str] = "auto",
     per host via the registry (``pallas`` on TPU, ``interpret`` elsewhere)
     so ``threshold_router(128)`` is safe on any machine; ``None`` means the
     plain XLA matmul datapath.
+
+    ``"auto"`` is resolved *once, here at construction*, pinning the
+    routing decision for the router's lifetime: a later
+    ``set_default_backend``/``use_backend`` must not silently re-route a
+    live server's buckets (build a new router to pick up a changed
+    default), and ``RequestRecord.backend`` telemetry always names the
+    concrete backend, never the sentinel.
     """
     def resolve(name: Optional[str]) -> Optional[str]:
         if name == "auto":
@@ -57,9 +68,12 @@ def threshold_router(min_dim: int, large: Optional[str] = "auto",
             return default_backend()
         return name
 
+    large = resolve(large)
+    small = resolve(small)
+
     def route(op: str, bucket: Tuple[int, ...]) -> Optional[str]:
         del op
-        return resolve(large if max(bucket) >= min_dim else small)
+        return large if max(bucket) >= min_dim else small
     return route
 
 
@@ -143,6 +157,13 @@ class PCAServer:
         (e.g. ``threshold_router(128)``: big buckets on Pallas, small ones
         on plain XLA).  Default: every bucket uses ``config.backend``.  The
         executable cache key is backend-qualified.
+      executor: where flushes compile and run (default:
+        ``LocalExecutor()``, the single-device path).  Pass a
+        ``sharded.MeshExecutor`` to shard each flush's batch axis across a
+        device mesh, retiring ``max_batch`` requests per flush with
+        ``max_batch / n_devices`` per device.  The cache key is
+        executor-qualified (mesh shape + devices), so swapping executors
+        never reuses an executable compiled for different placement.
       clock: injectable monotonic clock (tests drive deadlines manually).
     """
 
@@ -154,6 +175,7 @@ class PCAServer:
         max_delay_s: float = 0.01,
         pad_batches: bool = True,
         backend_router: Optional[BackendRouter] = None,
+        executor: Optional[LocalExecutor] = None,
         clock: Callable[[], float] = time.monotonic,
     ):
         self.config = config
@@ -162,6 +184,7 @@ class PCAServer:
         self.max_delay_s = max_delay_s
         self.pad_batches = pad_batches
         self.backend_router = backend_router
+        self.executor = executor or LocalExecutor()
         self.clock = clock
         self.stats = ServingStats(clock=clock)
         self._queues: Dict[Tuple, List[_Pending]] = {}
@@ -226,7 +249,10 @@ class PCAServer:
         t_flush = self.clock()
         batch, n_active = stack_requests([e.matrix for e in queue], bucket)
         b = len(queue)
-        bp = self.max_batch if self.pad_batches else b
+        bp = max(self.max_batch if self.pad_batches else b, b)
+        # the executor may demand a larger batch (a mesh pads up to the
+        # next data-axis multiple so every shard gets an identical slab)
+        bp = self.executor.round_batch(bp)
         if bp > b:  # inert filler: zero matrices with zero live coordinates
             batch = np.concatenate(
                 [batch, np.zeros((bp - b, *bucket), batch.dtype)])
@@ -235,8 +261,7 @@ class PCAServer:
                 axis=1)
         backend = self.backend_for(op, bucket)
         fn, hit = self._executable(op, bucket, bp, backend)
-        out = jax.block_until_ready(fn(jnp.asarray(batch),
-                                       *map(jnp.asarray, n_active)))
+        out = self.executor.run(fn, batch, n_active)
         t_done = self.clock()
         self.stats.record_flush(hit)
         for i, e in enumerate(queue):
@@ -245,7 +270,7 @@ class PCAServer:
                 batch_size=b, cache_hit=hit, t_submit=e.t_submit,
                 t_done=t_done, queue_s=t_flush - e.t_submit,
                 padding_waste=padding_waste(e.matrix.shape, bucket),
-                backend=backend)
+                backend=backend, n_shards=self.executor.n_shards)
             e.ticket._fulfil(self._unpack(op, out, i, e.matrix.shape), rec)
             self.stats.record_request(rec)
         return b
@@ -259,21 +284,10 @@ class PCAServer:
     def _executable(self, op: str, bucket: Tuple[int, ...], batch: int,
                     backend: Optional[str]) -> Tuple[Callable, bool]:
         cfg = dataclasses.replace(self.config, backend=backend)
-        key = (op, bucket, batch, cfg)
+        key = (op, bucket, batch, cfg, self.executor.cache_token())
         hit = key in self._cache
         if not hit:
-            kw = dict(sweeps=cfg.sweeps, pivot=cfg.pivot,
-                      rotation=cfg.rotation, angle=cfg.angle, tol=cfg.tol,
-                      matmul_fn=cfg.matmul_fn())
-            if op == "eigh":  # square: the two n_active axes coincide
-                fn = jax.jit(lambda C, nr, nc: jacobi_eigh_batched(C, nr, **kw))
-            elif op == "svd":
-                fn = jax.jit(
-                    lambda A, nr, nc: jacobi_svd_batched(A, nr, nc, **kw))
-            else:
-                fn = jax.jit(
-                    lambda X, nr, nc: pca_fit_batched(X, nr, nc, config=cfg))
-            self._cache[key] = fn
+            self._cache[key] = self.executor.compile(op, cfg, bucket, batch)
         return self._cache[key], hit
 
     @staticmethod

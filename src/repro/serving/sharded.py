@@ -1,0 +1,176 @@
+"""Flush executors: where a bucket's microbatch actually runs.
+
+The paper scales MANOJAVAM by replicating S systolic arrays behind one
+fabric; ``MeshExecutor`` is the next rung of that ladder -- replicate the
+*whole fabric* across a device mesh and shard the microbatch (S) axis over
+it, so one flush retires ``S x n_devices`` requests.  ``PCAServer`` owns
+queueing, bucketing and deadlines and delegates compile/placement/dispatch
+to an executor:
+
+  * ``LocalExecutor`` -- the original single-device path: plain ``jax.jit``
+    per (op, bucket, batch, config).  The default; zero distribution cost.
+  * ``MeshExecutor`` -- owns a ``jax.sharding.Mesh`` and jits the batched
+    solvers with batch-axis ``NamedSharding`` in/out specs resolved through
+    the ``parallel.sharding`` ``Rules`` machinery ("batch" role -> data
+    axis).  Partial flushes are padded up to a multiple of the data-axis
+    size so every shard receives an identical slab and the executable never
+    sees a ragged batch.
+
+Executables cache under a key that includes ``cache_token()`` (mesh axis
+sizes + device ids), so one server can swap meshes -- or route some buckets
+locally and others onto the mesh -- without ever reusing an executable
+compiled for different placement.
+
+The executor seam is also where the "async device streams" follow-on lands:
+an overlapping executor only has to change ``run`` (enqueue, return a
+future) without touching the engine or batching layers.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional, Sequence, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.core.pca import PCAConfig
+from repro.parallel.sharding import (batch_axes, pad_to_multiple,
+                                     rules_for_mesh)
+from .solver import build_solver_fn
+
+
+class LocalExecutor:
+    """Single-device flush execution (the seed behavior).
+
+    Stateless: the engine owns the executable cache; the executor only
+    decides batch rounding, compilation and dispatch.
+    """
+
+    n_shards: int = 1
+
+    def cache_token(self):
+        """Executor identity mixed into the engine's executable-cache key."""
+        return None
+
+    def round_batch(self, b: int) -> int:
+        """Device batch the engine must pad a b-request flush up to."""
+        return b
+
+    def compile(self, op: str, config: PCAConfig,
+                bucket: Tuple[int, ...], batch: int) -> Callable:
+        del bucket, batch  # single device: shape-polymorphic jit is enough
+        return jax.jit(build_solver_fn(op, config))
+
+    def run(self, fn: Callable, batch, n_active):
+        out = fn(jnp.asarray(batch), *map(jnp.asarray, n_active))
+        # gather the whole result tree to host in one transfer (np.asarray
+        # blocks on the computation).  Per-request slicing happens on the
+        # host copy: slicing a device array per ticket is O(batch) dispatches
+        # -- and on a sharded array each one is a cross-device gather that
+        # costs more than the flush's compute (measured ~3x the solve time
+        # at 8 host devices).
+        return jax.tree.map(np.asarray, out)
+
+    def describe(self) -> str:
+        return "local(1 device)"
+
+
+class MeshExecutor(LocalExecutor):
+    """Shard the flush's batch (S) axis across a named device mesh.
+
+    Args:
+      mesh: mesh to run on; ``data_axis`` must be one of its axis names.
+        Default: a 1-D "data" mesh over ``devices`` (or every visible
+        device), i.e. pure data parallelism over the sample axis -- the
+        regime where PCA throughput actually scales (Martel et al.).
+      devices: devices for the default mesh (ignored when ``mesh`` given).
+      data_axis: mesh axis the batch dim shards over.
+
+    Numerics are placement-invariant: each problem in the batch lives
+    entirely on one shard (the batch dim is the only sharded dim), so a
+    sharded flush is bit-for-bit the same math as the single-device flush
+    on every problem -- parity is tested per op in
+    ``tests/test_sharded_serving.py``.
+    """
+
+    def __init__(self, mesh: Optional[Mesh] = None,
+                 devices: Optional[Sequence] = None,
+                 data_axis: str = "data"):
+        if mesh is None:
+            devs = list(devices if devices is not None else jax.devices())
+            mesh = Mesh(np.asarray(devs), (data_axis,))
+        if data_axis not in mesh.axis_names:
+            raise ValueError(
+                f"data_axis {data_axis!r} not in mesh axes {mesh.axis_names}")
+        self.mesh = mesh
+        self.data_axis = data_axis
+        self.rules = rules_for_mesh(mesh)
+        axes = self.rules.axis("batch")
+        if not axes or data_axis not in (
+                (axes,) if isinstance(axes, str) else tuple(axes)):
+            raise ValueError(
+                "the batch role must resolve onto the data axis; name the "
+                f"mesh axis 'data' (got mesh axes {mesh.axis_names})")
+        self.n_shards = int(np.prod(
+            [mesh.shape[a] for a in ((axes,) if isinstance(axes, str)
+                                     else axes)]))
+
+    def cache_token(self):
+        # axis sizes + concrete device ids: same-shaped meshes over
+        # different devices must not share executables
+        return ("mesh", tuple(self.mesh.shape.items()),
+                tuple(d.id for d in self.mesh.devices.flat))
+
+    def round_batch(self, b: int) -> int:
+        return pad_to_multiple(max(b, 1), self.n_shards)
+
+    def compile(self, op: str, config: PCAConfig,
+                bucket: Tuple[int, ...], batch: int) -> Callable:
+        if batch % self.n_shards:
+            raise ValueError(
+                f"batch {batch} not a multiple of the data-axis size "
+                f"{self.n_shards}; round with round_batch() first")
+        fn = build_solver_fn(op, config)
+        in_struct = (
+            jax.ShapeDtypeStruct((batch, *bucket), jnp.float32),
+            *(jax.ShapeDtypeStruct((batch,), jnp.int32) for _ in bucket),
+        )
+        out_struct = jax.eval_shape(fn, *in_struct)
+        in_sh = self.rules.sharding_tree(batch_axes(in_struct), self.mesh)
+        out_sh = self.rules.sharding_tree(batch_axes(out_struct), self.mesh)
+        return jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
+
+    def describe(self) -> str:
+        shape = "x".join(f"{k}={v}" for k, v in self.mesh.shape.items())
+        return f"mesh({shape}; {self.n_shards} shards)"
+
+
+def host_mesh(n_devices: Optional[int] = None,
+              data_axis: str = "data") -> Mesh:
+    """A 1-D data mesh over the first ``n_devices`` visible devices
+    (None/0 = all).  Degrades gracefully: asking for more devices than
+    visible clamps rather than raising, so the same launch line works on a
+    laptop (1 device) and under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``."""
+    devs = jax.devices()
+    n = len(devs) if not n_devices else min(n_devices, len(devs))
+    return Mesh(np.asarray(devs[:n]), (data_axis,))
+
+
+def mesh_executor(spec) -> LocalExecutor:
+    """Executor from a CLI-style mesh spec.
+
+    ``None``/``"none"``/``"1"`` -> ``LocalExecutor``; ``"auto"`` -> a mesh
+    over every visible device; an int(-string) N -> a mesh over the first
+    min(N, visible) devices.
+    """
+    if spec is None or spec in ("none", "local"):
+        return LocalExecutor()
+    if spec == "auto":
+        n = None
+    else:
+        n = int(spec)
+        if n <= 1:
+            return LocalExecutor()
+    return MeshExecutor(mesh=host_mesh(n))

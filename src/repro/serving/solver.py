@@ -206,6 +206,27 @@ def pca_fit_batched(
                             evcr, cvcr, res.off_norm, n_rows, n_cols)
 
 
+def build_solver_fn(op: str, config: PCAConfig) -> Callable:
+    """The un-jitted batched solver for one op under one config.
+
+    Uniform signature ``(batch, n_rows, n_cols) -> result`` across all three
+    ops (eigh ignores the redundant column counts: the two n_active axes of a
+    square bucket coincide), so the serving executors can jit it with
+    whatever device placement they own -- plain ``jax.jit`` on the default
+    executor, batch-axis ``NamedSharding``s on the mesh executor.
+    """
+    kw = dict(sweeps=config.sweeps, pivot=config.pivot,
+              rotation=config.rotation, angle=config.angle, tol=config.tol,
+              matmul_fn=config.matmul_fn())
+    if op == "eigh":
+        return lambda C, nr, nc: jacobi_eigh_batched(C, nr, **kw)
+    if op == "svd":
+        return lambda A, nr, nc: jacobi_svd_batched(A, nr, nc, **kw)
+    if op == "pca":
+        return lambda X, nr, nc: pca_fit_batched(X, nr, nc, config=config)
+    raise ValueError(f"unknown op {op!r}")
+
+
 def pca_transform_batched(X, result: BatchedPCAResult, k: int,
                           matmul_fn: Optional[Callable] = None):
     """Batched top-k projection O = X_std V_k (paper eq. 5)."""

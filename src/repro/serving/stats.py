@@ -29,7 +29,10 @@ class RequestRecord:
     queue_s: float             # time spent waiting before the flush began
     padding_waste: float       # 1 - true_area / bucket_area
     backend: Optional[str] = None  # kernel backend the bucket routed to
-                                   # (None = plain XLA matmul datapath)
+                                   # (None = plain XLA matmul datapath);
+                                   # always a concrete name, never "auto"
+    n_shards: int = 1          # data-axis shards the flush spread over
+                               # (1 = single-device LocalExecutor)
 
     @property
     def latency_s(self) -> float:
@@ -102,6 +105,10 @@ class ServingStats:
                 float(np.mean([r.padding_waste for r in self.records]))
                 if self.records else 0.0),
             "max_queue_depth": max(depths) if depths else 0,
+            "mean_shards": (float(np.mean([r.n_shards for r in self.records]))
+                            if self.records else 0.0),
+            "max_shards": (max(r.n_shards for r in self.records)
+                           if self.records else 0),
             "flushes": self.flushes,
             "cache_hit_rate": (self.cache_hits / self.flushes
                                if self.flushes else 0.0),

@@ -202,6 +202,33 @@ def test_threshold_router_boundaries():
     assert ("pallas" in backends.available()) == (_AUTO == "pallas")
 
 
+def test_threshold_router_resolves_auto_once_at_construction(monkeypatch):
+    """The "auto" sentinel is resolved when the router is built, not on
+    every route call -- and telemetry therefore only ever sees the
+    concrete backend name."""
+    calls = []
+    orig = backends.default_backend
+
+    def counting_default():
+        calls.append(1)
+        return orig()
+
+    monkeypatch.setattr(backends, "default_backend", counting_default)
+    route = threshold_router(16)            # large="auto"
+    assert calls == [1]                     # resolved exactly once, eagerly
+    for n in (8, 16, 24, 32):
+        assert route("eigh", (n, n)) != "auto"
+    assert calls == [1]                     # ...and never again per route
+
+    srv = PCAServer(PCAConfig(T=8, S=2, sweeps=14), policy=BucketPolicy(T=8),
+                    max_delay_s=1e9,
+                    backend_router=threshold_router(16, large="auto",
+                                                    small="ref"))
+    srv.solve_many([_sym(20, seed=5), _sym(20, seed=6)], op="eigh")
+    recorded = {r.backend for r in srv.stats.records}
+    assert recorded == {_AUTO}              # the concrete name, no sentinel
+
+
 def test_server_routes_buckets_to_different_backends():
     srv = _routed_server()
     mats = [_sym(6, seed=1), _sym(6, seed=2), _sym(20, seed=3),

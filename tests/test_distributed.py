@@ -1,31 +1,10 @@
 """Multi-device SPMD tests, run in subprocesses with
---xla_force_host_platform_device_count=8 so the main pytest process keeps
-its single default device (per the dry-run isolation contract)."""
-import json
-import os
-import subprocess
-import sys
-import textwrap
-
+--xla_force_host_platform_device_count=8 (shared harness in tests/_mesh.py)
+so they see a real 8-way mesh no matter how the main pytest process was
+launched."""
 import pytest
 
-REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-
-
-def _run(body: str) -> dict:
-    prog = textwrap.dedent("""
-        import os
-        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-        import json
-        import numpy as np
-        import jax, jax.numpy as jnp
-    """) + textwrap.dedent(body)
-    env = dict(os.environ)
-    env["PYTHONPATH"] = os.path.join(REPO, "src")
-    r = subprocess.run([sys.executable, "-c", prog], capture_output=True,
-                       text=True, env=env, timeout=560)
-    assert r.returncode == 0, r.stderr[-4000:]
-    return json.loads(r.stdout.strip().splitlines()[-1])
+from _mesh import run_in_mesh_subprocess as _run
 
 
 def test_distributed_covariance_matches_local():
