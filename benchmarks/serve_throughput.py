@@ -15,6 +15,22 @@ sweeps the device-mesh size: one large bucket, ``MeshExecutor`` over
 the same thing on a laptop, in either CI matrix job, or next to a real
 accelerator -- the comparison ``scripts/check_bench.py`` gates on never
 mixes device-visibility regimes.
+
+The sync-vs-async sweep axis (``async_rows``) sweeps the pipeline depth
+(``max_inflight`` 1/2/4) over the same large bucket in *latency mode*:
+single-request flushes (``max_batch=1``), every request its own dispatch.
+That is the regime where a synchronous engine loses the most to
+host/device serialization -- the flush rate is highest, so the host stage
+(stack / launch / gather / unpack / telemetry, plus the next request's
+submission) is a measurable fraction of each flush -- and therefore the
+regime that isolates what the dispatch/in-flight/retire pipeline buys: at
+``max_inflight>1`` the host batches request k+1 while the device solves
+request k.  A deliberately light sweep count keeps the device stage from
+drowning the host stage (all rows, sync and async, share the identical
+solver, so the comparison is pure pipeline).  Rows are regime-pinned like
+the sharded ones: a subprocess forces a single host device, and the three
+servers' timing passes are interleaved so a slow host phase cannot land on
+one pipeline depth systematically.
 """
 from __future__ import annotations
 
@@ -39,14 +55,22 @@ SHARDED_DIM = 46
 SHARDED_FLUSH = 64
 SHARDED_DEVICE_COUNTS = (1, 2, 4, 8)
 
+# sync-vs-async sweep: the same large bucket in latency mode
+# (single-request flushes), pipeline depth as the only axis
+ASYNC_DIM = 46
+ASYNC_FLUSH = 1
+ASYNC_SWEEPS = 2
+ASYNC_REQUESTS = 48
+ASYNC_INFLIGHT = (1, 2, 4)
+
 
 def _measure(mats, T: int, S: int, mode: str, sweeps: int = 10,
              backend_router=None, executor=None, max_batch=None,
-             reps: int = 3):
+             max_inflight: int = 1, reps: int = 3):
     srv = PCAServer(PCAConfig(T=T, S=S, sweeps=sweeps),
                     policy=BucketPolicy(T=T, mode=mode), max_delay_s=10.0,
                     backend_router=backend_router, executor=executor,
-                    max_batch=max_batch)
+                    max_batch=max_batch, max_inflight=max_inflight)
     srv.solve_many(mats)            # warmup: compile every bucket executable
     # best-of-reps: scheduler noise only ever slows a pass down, and the
     # check_bench regression gate needs run-to-run stability
@@ -101,26 +125,93 @@ def sharded_sweep() -> list:
     return rows
 
 
-def sharded_sweep_subprocess() -> list:
-    """Run ``sharded_sweep`` in a child that forces 8 host devices.
+def _sweep_subprocess(fn_name: str, xla_flags: str) -> list:
+    """Run a sweep function in a child pinned to one XLA regime.
 
     XLA fixes the device count at backend init, so an already-started
-    single-device process cannot grow a mesh; the subprocess both makes the
-    sweep runnable from anywhere and pins the rows to one device-visibility
-    regime.
+    process cannot change its device visibility; the subprocess both makes
+    a sweep runnable from anywhere (either CI matrix job, a laptop, next
+    to an accelerator) and pins its rows to one regime so
+    ``scripts/check_bench.py`` never compares across regimes.
     """
     env = dict(os.environ)
-    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["XLA_FLAGS"] = xla_flags
     env["PYTHONPATH"] = (str(REPO_ROOT / "src") + os.pathsep
                          + str(REPO_ROOT))
-    prog = ("import json; from benchmarks.serve_throughput import "
-            "sharded_sweep; print(json.dumps(sharded_sweep()))")
+    prog = (f"import json; from benchmarks.serve_throughput import "
+            f"{fn_name}; print(json.dumps({fn_name}()))")
     r = subprocess.run([sys.executable, "-c", prog], capture_output=True,
                        text=True, env=env, timeout=1200, cwd=REPO_ROOT)
     if r.returncode != 0:
-        raise RuntimeError(f"sharded sweep subprocess failed:\n"
+        raise RuntimeError(f"{fn_name} subprocess failed:\n"
                            f"{r.stderr[-4000:]}")
     return json.loads(r.stdout.strip().splitlines()[-1])
+
+
+def sharded_sweep_subprocess() -> list:
+    return _sweep_subprocess("sharded_sweep",
+                             "--xla_force_host_platform_device_count=8")
+
+
+def async_sweep() -> list:
+    """Pipeline-depth rows for the large bucket in latency mode.
+
+    One server per ``max_inflight`` depth, identical solver and traffic;
+    the only difference is whether the engine blocks on every flush
+    (depth 1, the synchronous baseline) or keeps flushes in flight while
+    it batches the next request.  Timing passes are *interleaved* across
+    the servers -- a noisy-neighbour phase hits every depth equally
+    instead of skewing one row -- and each row keeps its best pass (the
+    same best-of-reps policy as ``_measure``).
+    """
+    import jax
+
+    mats = mixed_traffic(ASYNC_REQUESTS, "eigh", (ASYNC_DIM,))
+    servers = {
+        depth: PCAServer(
+            PCAConfig(T=16, S=ASYNC_FLUSH, sweeps=ASYNC_SWEEPS),
+            policy=BucketPolicy(T=16, mode="tile"), max_delay_s=10.0,
+            max_batch=ASYNC_FLUSH, max_inflight=depth)
+        for depth in ASYNC_INFLIGHT
+    }
+    for srv in servers.values():
+        srv.solve_many(mats)        # warmup: compile the bucket executable
+    best = {depth: (float("inf"), None) for depth in ASYNC_INFLIGHT}
+    for _ in range(8):
+        for depth, srv in servers.items():
+            srv.stats.reset()
+            t0 = time.perf_counter()
+            srv.solve_many(mats)
+            wall = time.perf_counter() - t0
+            if wall < best[depth][0]:
+                best[depth] = (wall, srv.stats.summary())
+    rows = []
+    base_rps = None
+    for depth in ASYNC_INFLIGHT:
+        wall, s = best[depth]
+        row = {
+            "T": 16, "S": ASYNC_FLUSH, "policy": "tile", "op": "eigh",
+            "sweeps": ASYNC_SWEEPS, "inflight": depth,
+            "device_count": jax.device_count(),
+            "wall_s": wall,
+            "requests_per_s": len(mats) / wall,
+            "us_per_request": wall / len(mats) * 1e6,
+            "latency_p50_ms": s["latency_p50_ms"],
+            "latency_p99_ms": s["latency_p99_ms"],
+            "overlap_frac": s["overlap_frac"],
+            "mean_inflight_depth": s["mean_inflight_depth"],
+        }
+        if depth == 1:
+            base_rps = row["requests_per_s"]
+        row["speedup_vs_sync"] = (row["requests_per_s"] / base_rps
+                                  if base_rps else float("nan"))
+        rows.append(row)
+    return rows
+
+
+def async_sweep_subprocess() -> list:
+    return _sweep_subprocess("async_sweep",
+                             "--xla_force_host_platform_device_count=1")
 
 
 def run(fast: bool = True) -> None:
@@ -172,6 +263,18 @@ def run(fast: bool = True) -> None:
     emit("serve_sharded_best_speedup", f"{sharded_best:.2f}",
          "acceptance: >=2x at 8 host devices vs 1 (large bucket)")
 
+    async_rows = async_sweep_subprocess()
+    for row in async_rows:
+        emit(f"serve_async_inflight{row['inflight']}",
+             f"{row['us_per_request']:.1f}",
+             f"rps={row['requests_per_s']:.1f}"
+             f";speedup_vs_sync={row['speedup_vs_sync']:.2f}"
+             f";overlap={row['overlap_frac']:.2f}")
+    async_best = (max(r["speedup_vs_sync"] for r in async_rows)
+                  if async_rows else float("nan"))
+    emit("serve_async_best_speedup", f"{async_best:.2f}",
+         "acceptance: >=1.3x for max_inflight>1 vs 1 (large bucket)")
+
     emit_json("serve_throughput", {
         "n_requests": n_req,
         "mixed_dims": list(MIXED_DIMS),
@@ -182,6 +285,12 @@ def run(fast: bool = True) -> None:
         "sharded_flush": SHARDED_FLUSH,
         "sharded_best_speedup": sharded_best,
         "sharded_rows": sharded_rows,
+        "async_dim": ASYNC_DIM,
+        "async_flush": ASYNC_FLUSH,
+        "async_sweeps": ASYNC_SWEEPS,
+        "async_requests": ASYNC_REQUESTS,
+        "async_best_speedup": async_best,
+        "async_rows": async_rows,
     })
 
 

@@ -57,3 +57,21 @@ pvm = server.stats.predicted_vs_measured(VIRTEX_US)
 med = np.median([r["ratio"] for r in pvm])
 print(f"measured service latency is {med:.0f}x the MANOJAVAM(16,32) "
       f"fabric-model prediction (queueing + batching + CPU dispatch)")
+
+# --- a fresh burst through a depth-4 pipeline -------------------------------
+# max_inflight=4 lets up to 3 flushes stay on the device while the host
+# batches the next one (the paper's keep-the-arrays-busy overlap).  The
+# pipeline only reorders work -- it runs the same cached executables, so
+# results match the synchronous engine bit-for-bit (pinned by
+# `serve_pca --selftest` and tests/test_serving.py).
+pipelined = PCAServer(PCAConfig(T=16, S=4, sweeps=15),
+                      policy=BucketPolicy(T=16, mode="tile"),
+                      max_delay_s=0.05, max_inflight=4)
+tickets = [pipelined.submit((lambda a: (a + a.T) / 2)(
+               rng.standard_normal((n, n)).astype(np.float32)), op="eigh")
+           for n in (12, 29, 17, 24, 21, 14, 26, 19)]
+pipelined.drain()
+a = pipelined.stats.summary()
+print(f"\nasync pipeline: {a['requests']} requests, max in-flight depth "
+      f"{a['max_inflight_depth']}, host/device overlap "
+      f"{a['overlap_frac']:.0%} of the dispatch-to-retire span")

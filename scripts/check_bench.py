@@ -11,10 +11,19 @@ throughput regression beyond the tolerance.
 Rows are matched by their identity fields (strings, bools and ints --
 T/S/policy/backend/n_devices/...), and compared on their throughput metric:
 ``requests_per_s`` (higher is better) when present, else the first
-``*_us``/``us_per_*`` field (lower is better).  Rows present on only one
-side are reported but never fail the gate -- a benchmark may legitimately
-emit fewer rows in a reduced environment (e.g. the single-device CI job
-skips the multi-device sweep) or grow new rows in the PR under test.
+``*_us``/``us_per_*`` field (lower is better).  A fresh row that *grew* a
+new identity field the committed copy predates (e.g. a sweep gains an
+``inflight`` axis) still gates against its committed predecessor: when no
+exact match exists, a base row whose identity is a strict subset of the
+fresh row's -- same value on every field the committed row knows about --
+is compared instead, provided the subset match is unambiguous (a single
+base candidate).  Exact matches claim their baselines first, then widened
+rows claim what remains first-come in emission order, so a benchmark that
+fans one old row out into several new ones gates one of them and reports
+the rest as added.  Rows present on only one side are
+reported but never fail the gate -- a benchmark may legitimately emit
+fewer rows in a reduced environment (e.g. the single-device CI job skips
+the multi-device sweep) or grow new rows in the PR under test.
 
 A file whose content is byte-identical to HEAD was not re-emitted this run
 and is skipped.  The tolerance (default 25% from the CI issue) can be
@@ -77,6 +86,26 @@ def committed_copy(name: str) -> str | None:
     return r.stdout if r.returncode == 0 else None
 
 
+def pop_subset_match(base_rows: dict, section: str, fresh_key: tuple):
+    """Claim the base row whose identity the fresh row's strictly extends.
+
+    ``base_rows`` maps (section, key) -> row.  A base row is a candidate
+    when it has an identity at all and every (field, value) of it also
+    appears in the fresh row's identity -- i.e. the fresh row only *added*
+    identity fields (an identity-less base row would be a "subset" of
+    everything, so it never matches).  Exactly one candidate is required;
+    ambiguity stays unmatched (better an added row than a wrong
+    comparison).  The claimed row is popped so two fresh rows can never
+    gate against the same baseline.
+    """
+    fresh_pairs = set(fresh_key)
+    candidates = [k for k in base_rows
+                  if k[0] == section and k[1] and set(k[1]) < fresh_pairs]
+    if len(candidates) != 1:
+        return None
+    return base_rows.pop(candidates[0])
+
+
 def compare_file(name: str, tol: float) -> tuple[list, bool]:
     """Returns (report lines, ok)."""
     fresh_path = REPO_ROOT / name
@@ -88,15 +117,38 @@ def compare_file(name: str, tol: float) -> tuple[list, bool]:
     fresh_text = fresh_path.read_text()
     if fresh_text == base_text:
         return [f"{name}: identical to HEAD (not re-emitted); skipped"], True
+    return compare_docs(name, json.loads(base_text), json.loads(fresh_text),
+                        tol)
+
+
+def compare_docs(name: str, base_doc: dict, fresh_doc: dict,
+                 tol: float) -> tuple[list, bool]:
+    """Diff two BENCH documents row-by-row; returns (report lines, ok)."""
     base_rows = {}
-    for section, row in iter_rows(json.loads(base_text)):
+    for section, row in iter_rows(base_doc):
         base_rows[(section, row_key(row))] = row
 
+    # two passes: every exact identity match claims its baseline first, so
+    # a widened row can never steal the base row an exact fresh row needs
+    fresh = [(section, row, row_key(row))
+             for section, row in iter_rows(fresh_doc)]
+    matches = {}
+    for i, (section, row, key) in enumerate(fresh):
+        base = base_rows.pop((section, key), None)
+        if base is not None:
+            matches[i] = (base, False)
+    for i, (section, row, key) in enumerate(fresh):
+        if i not in matches:
+            base = pop_subset_match(base_rows, section, key)
+            if base is not None:
+                matches[i] = (base, True)
+
     lines, ok, compared = [], True, 0
-    for section, row in iter_rows(json.loads(fresh_text)):
-        key = (section, row_key(row))
-        ident = ", ".join(f"{k}={v}" for k, v in key[1]) or "<no id>"
-        base = base_rows.pop(key, None)
+    for i, (section, row, key) in enumerate(fresh):
+        ident = ", ".join(f"{k}={v}" for k, v in key) or "<no id>"
+        base, widened = matches.get(i, (None, False))
+        if widened:
+            ident += " (identity widened)"
         if base is None:
             lines.append(f"  NEW     {section}[{ident}]")
             continue

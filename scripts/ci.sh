@@ -7,7 +7,9 @@
 #      resolve to (device-visibility drift shows up in the log header
 #      instead of as parity failures)
 #   2. serving smoke        -- submit -> bucket -> batch -> cache -> unpack,
-#      including a sharded-flush parity leg over every visible device
+#      including a sharded-flush parity leg over every visible device and
+#      an async-pipeline leg (sync-vs-async bit-for-bit parity on a mixed
+#      burst, in-flight depth telemetry > 1); runs in both matrix jobs
 #   3. backend-sweep smoke  -- one sweep point: a router splits two buckets
 #      across two kernel backends in one server, verified against numpy
 #   4. perf-regression gate -- re-emit BENCH_serve_throughput.json and diff

@@ -14,13 +14,20 @@ max-batch / n_devices per device):
   XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
       python -m repro.launch.serve_pca --mesh 8 --max-batch 32
 
+Async pipeline (up to N flushes in flight; host batching overlaps device
+execution -- N=1 is the synchronous engine):
+  PYTHONPATH=src python -m repro.launch.serve_pca --inflight 4
+
 CI smoke (exercises submit/flush/cache + checks results against numpy;
-includes a sharded-flush parity leg over every visible device):
+includes a sharded-flush parity leg over every visible device and an
+async-pipeline leg: a mixed burst must match the synchronous engine
+bit-for-bit while the in-flight depth telemetry shows real pipelining):
   PYTHONPATH=src python -m repro.launch.serve_pca --selftest
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import sys
 
@@ -81,10 +88,34 @@ def selftest() -> int:
     shards = {r.n_shards for r in sharded.stats.records}
     assert shards == {ex.n_shards}, shards
 
+    # async-pipeline leg: the same mixed burst (both ops, two buckets)
+    # through a deep pipeline must match the synchronous engine
+    # *bit-for-bit* -- the pipeline only reorders work, it runs the
+    # identical cached executables on identical slabs -- while the depth
+    # telemetry proves flushes really were in flight together
+    pipelined = PCAServer(PCAConfig(T=8, S=4, sweeps=14),
+                          policy=BucketPolicy(T=8), max_delay_s=10.0,
+                          max_inflight=4)
+    for op, traffic in (("eigh", mats), ("svd", svd_in)):
+        got = pipelined.solve_many(traffic, op=op)
+        want = srv.solve_many(traffic, op=op)
+        for g, w in zip(got, want):
+            for field in (f.name for f in dataclasses.fields(g)):
+                np.testing.assert_array_equal(
+                    np.asarray(getattr(g, field)),
+                    np.asarray(getattr(w, field)),
+                    err_msg=f"sync-vs-async {op}.{field}")
+    async_summary = pipelined.stats.summary()
+    assert async_summary["max_inflight_depth"] > 1, async_summary
+    assert pipelined.inflight() == 0
+
     print("serve_pca selftest ok:",
           json.dumps({k: round(v, 4) for k, v in summary.items()}))
     print("serve_pca sharded selftest ok:", json.dumps({
         "executor": ex.describe(), "n_shards": ex.n_shards}))
+    print("serve_pca async selftest ok:", json.dumps({
+        "max_inflight_depth": async_summary["max_inflight_depth"],
+        "overlap_frac": round(async_summary["overlap_frac"], 4)}))
     return 0
 
 
@@ -106,6 +137,13 @@ def main(argv=None) -> int:
                          "devices; clamps to what is visible).  Use "
                          "XLA_FLAGS=--xla_force_host_platform_device_count=8 "
                          "to carve host devices out of one CPU.")
+    ap.add_argument("--inflight", type=int, default=1,
+                    help="pipeline depth: how many dispatched flushes may "
+                         "be in flight at once, counting the one being "
+                         "dispatched.  1 (default) is the synchronous "
+                         "engine; N>1 overlaps host-side batching with "
+                         "device execution (JAX async dispatch), "
+                         "back-pressuring by retiring the oldest flush")
     ap.add_argument("--timeout-ms", type=float, default=10.0,
                     help="flush deadline per queued request")
     ap.add_argument("--sweeps", type=int, default=12)
@@ -124,7 +162,8 @@ def main(argv=None) -> int:
                                                 mode=args.bucket_policy),
                     max_batch=args.max_batch,
                     max_delay_s=args.timeout_ms / 1e3,
-                    executor=executor)
+                    executor=executor,
+                    max_inflight=args.inflight)
     mats = mixed_traffic(args.requests, args.op, dims, args.seed)
     srv.solve_many(mats, op=args.op)       # warmup: compile the buckets
     srv.stats.reset()
@@ -137,7 +176,8 @@ def main(argv=None) -> int:
         "config": {"T": args.tile, "S": args.max_batch,
                    "policy": args.bucket_policy,
                    "timeout_ms": args.timeout_ms,
-                   "executor": executor.describe()},
+                   "executor": executor.describe(),
+                   "max_inflight": args.inflight},
         "summary": summary,
         "fabric_model": {
             "reference": "MANOJAVAM(16,32)@Virtex-US+",

@@ -8,22 +8,28 @@ deadline-aware microbatching, a compiled-executable cache, and full
 telemetry (``stats``).  Flush placement is an executor (``sharded``): the
 default ``LocalExecutor`` runs on one device; ``MeshExecutor`` shards the
 batch axis across a named device mesh so one flush retires S x n_devices
-requests.
+requests.  Flush *timing* is a pipeline (``inflight``): executors launch
+without blocking, a bounded in-flight queue holds launched flushes, and
+retirement unpacks them into tickets -- ``PCAServer(max_inflight=N)``
+overlaps host-side batching with device execution (N=1 is the synchronous
+engine).
 """
 from .batching import (BucketPolicy, POLICIES, pad_to_bucket, padding_waste,
                        stack_requests)
 from .engine import (BackendRouter, OPS, PCAServer, ServedEigh, ServedPCA,
                      ServedSVD, Ticket, threshold_router)
+from .inflight import InFlightFlush, InFlightQueue
 from .sharded import LocalExecutor, MeshExecutor, host_mesh, mesh_executor
 from .solver import (BatchedEighResult, BatchedPCAResult, BatchedSVDResult,
                      build_solver_fn, jacobi_eigh_batched,
                      jacobi_svd_batched, pca_fit_batched,
                      pca_transform_batched)
-from .stats import RequestRecord, ServingStats, percentile
+from .stats import FlushRecord, RequestRecord, ServingStats, percentile
 
 __all__ = [
     "BackendRouter", "BatchedEighResult", "BatchedPCAResult",
-    "BatchedSVDResult", "BucketPolicy", "LocalExecutor", "MeshExecutor",
+    "BatchedSVDResult", "BucketPolicy", "FlushRecord", "InFlightFlush",
+    "InFlightQueue", "LocalExecutor", "MeshExecutor",
     "OPS", "PCAServer", "POLICIES", "RequestRecord", "ServedEigh",
     "ServedPCA", "ServedSVD", "ServingStats", "Ticket", "build_solver_fn",
     "host_mesh", "jacobi_eigh_batched", "jacobi_svd_batched",

@@ -10,16 +10,29 @@ held in an explicit cache -- with ``pad_batches=True`` partial flushes are
 zero-padded up to S so steady-state traffic runs entirely on cached
 executables and never recompiles.
 
-The engine is synchronous and clock-injectable: callers drive time via
-``submit``/``poll``/``drain``, which makes deadline behavior deterministic
-under test and keeps the design open for an async device-stream front-end
-(see ROADMAP follow-ons).
+A flush is a three-stage pipeline, the software image of the paper's
+block-streaming (keep the S arrays busy while the next block streams in):
+
+  dispatch   ``_dispatch_key``: stack/pad, grab the cached executable,
+             launch via ``executor.submit`` -- non-blocking, the host goes
+             straight back to batching while the device crunches.
+  in-flight  a bounded ``inflight.InFlightQueue`` of launched flushes
+             (``max_inflight`` is the back-pressure valve).
+  retire     ``_retire``: one host gather per flush, unpack into tickets,
+             record telemetry.  ``poll``/``drain`` retire completed
+             flushes; ``Ticket.result()``/``Ticket.wait()`` force exactly
+             their own flush home.
+
+With ``max_inflight=1`` (the default) every dispatch immediately retires
+its own flush -- exactly the synchronous engine this pipeline replaced --
+so the clock-injectable deterministic test story is unchanged: callers
+drive time via ``submit``/``poll``/``drain``.
 
 Where a flush *runs* is the executor's business (``sharded``): the default
 ``LocalExecutor`` is the single-device path; ``MeshExecutor`` shards the
 batch axis across a device mesh so one flush retires S x n_devices
 requests.  The engine only asks the executor to round the batch, compile
-the solver, and run it -- queueing/bucketing/deadlines never see devices.
+the solver, and launch it -- queueing/bucketing/deadlines never see devices.
 """
 from __future__ import annotations
 
@@ -32,6 +45,7 @@ import numpy as np
 
 from repro.core.pca import PCAConfig
 from .batching import BucketPolicy, padding_waste, stack_requests
+from .inflight import InFlightFlush, InFlightQueue
 from .sharded import LocalExecutor
 from .stats import RequestRecord, ServingStats
 
@@ -103,9 +117,18 @@ class ServedPCA:
 
 
 class Ticket:
-    """Handle returned by ``submit``; fulfilled when its batch flushes."""
+    """Handle returned by ``submit``; fulfilled when its flush retires.
 
-    __slots__ = ("rid", "op", "shape", "bucket", "record", "_result", "_done")
+    A ticket moves through the pipeline stages with its request: *queued*
+    (waiting in its bucket queue), *in flight* (its microbatch was
+    dispatched and is executing), *done* (its flush retired).  ``result()``
+    on an in-flight ticket forces exactly its own flush home; ``wait()``
+    additionally dispatches a still-queued partial batch, so it always
+    makes progress.
+    """
+
+    __slots__ = ("rid", "op", "shape", "bucket", "record", "_result",
+                 "_done", "_flush", "_server")
 
     def __init__(self, rid: int, op: str, shape, bucket):
         self.rid = rid
@@ -115,21 +138,71 @@ class Ticket:
         self.record: Optional[RequestRecord] = None
         self._result = None
         self._done = False
+        self._flush: Optional[InFlightFlush] = None
+        self._server = None
 
     @property
     def done(self) -> bool:
         return self._done
 
+    @property
+    def inflight(self) -> bool:
+        """Dispatched but not yet retired."""
+        return self._flush is not None
+
     def result(self):
+        """The served result; retires this ticket's own flush if it is in
+        flight, raises if the request is still queued (un-dispatched)."""
         if not self._done:
-            raise RuntimeError(
-                f"request {self.rid} still queued; call poll()/drain()")
+            flush = self._flush
+            if flush is None:
+                depth = (self._server._queue_depth(self.op, self.bucket)
+                         if self._server is not None else 0)
+                raise RuntimeError(
+                    f"request {self.rid} (op={self.op!r}, bucket "
+                    f"{self.bucket}) is still queued ({depth} request(s) "
+                    f"in its bucket queue); call wait(), or poll()/drain() "
+                    f"the server, to flush it")
+            flush.retire()
+        return self._result
+
+    def wait(self, timeout: Optional[float] = None):
+        """Block until this request's result is available and return it.
+
+        A still-queued request first has its bucket queue dispatched (a
+        partial flush, like a deadline expiry).  ``timeout`` -- measured on
+        the host wall clock, not the server's injectable clock, since it
+        bounds a real device wait -- raises ``TimeoutError`` if the flush
+        has not completed in time (the flush stays in flight and a later
+        ``wait``/``poll``/``drain`` can still retire it).
+        """
+        if self._done:
+            return self._result
+        if self._flush is None:
+            if self._server is None:
+                raise RuntimeError(
+                    f"request {self.rid} is not attached to a server")
+            self._server._dispatch_key((self.op, self.bucket))
+        if self._done:  # dispatch back-pressure may already have retired us
+            return self._result
+        if timeout is not None:
+            deadline = time.monotonic() + timeout
+            while not self._flush.ready():
+                if time.monotonic() >= deadline:
+                    raise TimeoutError(
+                        f"request {self.rid} (op={self.op!r}, bucket "
+                        f"{self.bucket}) still in flight after "
+                        f"{timeout:g}s")
+                time.sleep(50e-6)
+        self._flush.retire()
         return self._result
 
     def _fulfil(self, result, record: RequestRecord) -> None:
         self._result = result
         self.record = record
         self._done = True
+        self._flush = None
+        self._server = None
 
 
 @dataclasses.dataclass
@@ -164,6 +237,14 @@ class PCAServer:
         ``max_batch / n_devices`` per device.  The cache key is
         executor-qualified (mesh shape + devices), so swapping executors
         never reuses an executable compiled for different placement.
+      max_inflight: pipeline depth -- how many dispatched flushes may
+        exist simultaneously, counting the one being dispatched.  ``1``
+        (the default) is the synchronous engine: every dispatch
+        immediately blocks on its own retirement.  ``N > 1`` lets up to
+        ``N - 1`` flushes stay in flight while the host batches the next,
+        overlapping host-side stacking/padding/unpacking with device
+        execution; dispatching beyond the cap back-pressures by retiring
+        the oldest flush first.
       clock: injectable monotonic clock (tests drive deadlines manually).
     """
 
@@ -176,8 +257,11 @@ class PCAServer:
         pad_batches: bool = True,
         backend_router: Optional[BackendRouter] = None,
         executor: Optional[LocalExecutor] = None,
+        max_inflight: int = 1,
         clock: Callable[[], float] = time.monotonic,
     ):
+        if max_inflight < 1:
+            raise ValueError(f"max_inflight must be >= 1, got {max_inflight}")
         self.config = config
         self.policy = policy or BucketPolicy(T=config.T)
         self.max_batch = max_batch or config.S
@@ -185,11 +269,14 @@ class PCAServer:
         self.pad_batches = pad_batches
         self.backend_router = backend_router
         self.executor = executor or LocalExecutor()
+        self.max_inflight = max_inflight
         self.clock = clock
         self.stats = ServingStats(clock=clock)
         self._queues: Dict[Tuple, List[_Pending]] = {}
+        self._inflight = InFlightQueue()
         self._cache: Dict[Tuple, Callable] = {}
         self._rid = itertools.count()
+        self._seq = itertools.count()
 
     # -- request path -------------------------------------------------------
     def submit(self, matrix, op: str = "eigh",
@@ -205,34 +292,52 @@ class PCAServer:
         bucket = self.policy.bucket_shape(matrix.shape)
         rid = next(self._rid)
         ticket = Ticket(rid, op, matrix.shape, bucket)
+        ticket._server = self
         delay = self.max_delay_s if max_delay_s is None else max_delay_s
         key = (op, bucket)
         queue = self._queues.setdefault(key, [])
         queue.append(_Pending(rid, matrix, ticket, now, now + delay))
         self.stats.record_queue_depth(len(queue), now)
         if len(queue) >= self.max_batch:
-            self._flush_key(key)
+            self._dispatch_key(key)
         return ticket
 
     def poll(self, now: Optional[float] = None) -> int:
-        """Flush every queue whose oldest deadline has passed; returns the
-        number of requests completed."""
+        """Retire every completed in-flight flush, then dispatch every
+        queue whose oldest deadline has passed; returns the number of
+        requests *retired* (with ``max_inflight=1`` a dispatched queue
+        retires synchronously, so this is also the number flushed).
+
+        Queues are visited in sorted (op, bucket) order, so dispatch --
+        and therefore retirement and telemetry -- order is reproducible
+        under the injected clock no matter the submission interleaving.
+        """
         now = self.clock() if now is None else now
-        done = 0
-        for key in [k for k, q in self._queues.items()
-                    if q and min(e.flush_by for e in q) <= now]:
-            done += self._flush_key(key)
+        done = self._inflight.retire_ready()
+        for key in sorted(k for k, q in self._queues.items()
+                          if q and min(e.flush_by for e in q) <= now):
+            done += self._dispatch_key(key)
         return done
 
     def drain(self) -> int:
-        """Flush everything regardless of deadlines."""
+        """Dispatch everything regardless of deadlines, then retire every
+        in-flight flush; returns the number of requests retired."""
         done = 0
-        for key in list(self._queues):
-            done += self._flush_key(key)
-        return done
+        for key in sorted(self._queues):
+            done += self._dispatch_key(key)
+        return done + self._inflight.retire_to_depth(0)
 
     def pending(self) -> int:
+        """Requests queued but not yet dispatched."""
         return sum(len(q) for q in self._queues.values())
+
+    def inflight(self) -> int:
+        """Flushes dispatched but not yet retired."""
+        return self._inflight.depth
+
+    def inflight_requests(self) -> int:
+        """Requests riding the currently in-flight flushes."""
+        return self._inflight.requests()
 
     def solve_many(self, matrices, op: str = "eigh") -> List:
         """Convenience: submit a burst, drain, return results in order."""
@@ -240,13 +345,22 @@ class PCAServer:
         self.drain()
         return [t.result() for t in tickets]
 
-    # -- batch execution ----------------------------------------------------
-    def _flush_key(self, key: Tuple) -> int:
+    # -- dispatch stage -----------------------------------------------------
+    def _dispatch_key(self, key: Tuple) -> int:
+        """Stack, pad, compile, launch one bucket queue -- non-blocking.
+
+        The flush joins the in-flight queue; back-pressure then retires
+        whatever already completed (free) and, if the pipeline is over
+        ``max_inflight``, blocks on the oldest flush until the cap holds.
+        With ``max_inflight=1`` the just-dispatched flush itself retires
+        here -- exactly the old synchronous flush.  Returns the number of
+        requests retired while enforcing the cap.
+        """
         op, bucket = key
         queue = self._queues.pop(key, [])
         if not queue:
             return 0
-        t_flush = self.clock()
+        t_dispatch = self.clock()
         batch, n_active = stack_requests([e.matrix for e in queue], bucket)
         b = len(queue)
         bp = max(self.max_batch if self.pad_batches else b, b)
@@ -261,19 +375,66 @@ class PCAServer:
                 axis=1)
         backend = self.backend_for(op, bucket)
         fn, hit = self._executable(op, bucket, bp, backend)
-        out = self.executor.run(fn, batch, n_active)
-        t_done = self.clock()
-        self.stats.record_flush(hit)
-        for i, e in enumerate(queue):
+        flush = self.executor.submit(fn, batch, n_active)
+        flush.seq = next(self._seq)
+        flush.key = key
+        flush.entries = tuple(queue)
+        flush.t_dispatch = t_dispatch
+        flush.t_launched = self.clock()
+        flush.backend = backend
+        flush.batch_size = b
+        flush.cache_hit = hit
+        flush._retire_cb = self._retire
+        self._inflight.push(flush)
+        flush.inflight_depth = self._inflight.depth
+        for e in queue:
+            e.ticket._flush = flush
+        self.stats.record_dispatch(self._inflight.depth, t_dispatch)
+        # back-pressure: block on the oldest flush until the cap holds.
+        # Deliberately *not* an opportunistic ready-sweep -- retirement
+        # points stay deterministic (cap, poll, drain, ticket) no matter
+        # how fast the device happens to be, which is what keeps the
+        # injected-clock test story exact.
+        return self._inflight.retire_to_depth(self.max_inflight - 1)
+
+    # -- retire stage -------------------------------------------------------
+    def _retire(self, flush: InFlightFlush) -> int:
+        """Force one flush's device batch home and fulfil its tickets.
+
+        Idempotent (a ticket may race poll/drain to the same flush).  The
+        gap between ``t_dispatch`` and the moment we block here is host
+        work that overlapped device execution -- the quantity the pipeline
+        exists to maximize; ``stats`` accounts it per flush.
+        """
+        if flush.retired:
+            return 0
+        op, bucket = flush.key
+        t_wait = self.clock()
+        out = flush.result()
+        t_retire = self.clock()
+        flush.retired = True
+        self._inflight.remove(flush)
+        self.stats.record_flush(
+            flush.cache_hit, t_dispatch=flush.t_dispatch,
+            t_launched=flush.t_launched, t_wait=t_wait, t_retire=t_retire,
+            batch_size=flush.batch_size,
+            inflight_depth=flush.inflight_depth)
+        for i, e in enumerate(flush.entries):
             rec = RequestRecord(
                 rid=e.rid, op=op, shape=e.matrix.shape, bucket=bucket,
-                batch_size=b, cache_hit=hit, t_submit=e.t_submit,
-                t_done=t_done, queue_s=t_flush - e.t_submit,
+                batch_size=flush.batch_size, cache_hit=flush.cache_hit,
+                t_submit=e.t_submit, t_done=t_retire,
+                queue_s=flush.t_dispatch - e.t_submit,
                 padding_waste=padding_waste(e.matrix.shape, bucket),
-                backend=backend, n_shards=self.executor.n_shards)
+                backend=flush.backend, n_shards=flush.n_shards,
+                t_dispatch=flush.t_dispatch,
+                inflight_depth=flush.inflight_depth)
             e.ticket._fulfil(self._unpack(op, out, i, e.matrix.shape), rec)
             self.stats.record_request(rec)
-        return b
+        return len(flush.entries)
+
+    def _queue_depth(self, op: str, bucket: Tuple[int, ...]) -> int:
+        return len(self._queues.get((op, bucket), ()))
 
     def backend_for(self, op: str, bucket: Tuple[int, ...]) -> Optional[str]:
         """The kernel backend this (op, bucket) routes to."""

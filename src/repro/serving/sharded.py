@@ -21,9 +21,12 @@ sizes + device ids), so one server can swap meshes -- or route some buckets
 locally and others onto the mesh -- without ever reusing an executable
 compiled for different placement.
 
-The executor seam is also where the "async device streams" follow-on lands:
-an overlapping executor only has to change ``run`` (enqueue, return a
-future) without touching the engine or batching layers.
+The executor seam is where the "async device streams" follow-on landed:
+``submit`` launches a flush without blocking (JAX async dispatch returns
+device futures the moment the computation is enqueued) and hands back an
+``inflight.InFlightFlush`` whose ``ready()``/``result()`` the engine's
+in-flight and retire stages drive.  ``run`` remains as the blocking
+compatibility path -- exactly ``submit(...).result()``.
 """
 from __future__ import annotations
 
@@ -37,7 +40,22 @@ from jax.sharding import Mesh
 from repro.core.pca import PCAConfig
 from repro.parallel.sharding import (batch_axes, pad_to_multiple,
                                      rules_for_mesh)
+from .inflight import InFlightFlush
 from .solver import build_solver_fn
+
+
+def _donate_kwargs() -> dict:
+    """Donate the flush's input slab to its executable.
+
+    The engine never reuses a dispatched batch, so XLA may alias the input
+    buffer for outputs -- one less allocation per in-flight flush, which is
+    what keeps a deep pipeline's memory footprint flat on accelerators.
+    CPU PJRT cannot alias host buffers and logs a warning per compiled
+    executable, so donation is reserved for real device backends.
+    """
+    if jax.default_backend() == "cpu":
+        return {}
+    return {"donate_argnums": (0,)}
 
 
 class LocalExecutor:
@@ -60,17 +78,26 @@ class LocalExecutor:
     def compile(self, op: str, config: PCAConfig,
                 bucket: Tuple[int, ...], batch: int) -> Callable:
         del bucket, batch  # single device: shape-polymorphic jit is enough
-        return jax.jit(build_solver_fn(op, config))
+        return jax.jit(build_solver_fn(op, config), **_donate_kwargs())
+
+    def submit(self, fn: Callable, batch, n_active) -> InFlightFlush:
+        """Launch a flush without blocking (the pipeline's dispatch stage).
+
+        JAX async dispatch returns the output tree as device futures, so
+        the host goes straight back to batching while the device crunches.
+        The returned handle exposes ``ready()`` for completion detection
+        and ``result()`` for the single host gather -- per-request slicing
+        happens on the host copy, because slicing a device array per ticket
+        is O(batch) dispatches, and on a sharded array each one is a
+        cross-device gather that costs more than the flush's compute
+        (measured ~3x the solve time at 8 host devices).
+        """
+        out = fn(jnp.asarray(batch), *map(jnp.asarray, n_active))
+        return InFlightFlush(out, n_shards=self.n_shards)
 
     def run(self, fn: Callable, batch, n_active):
-        out = fn(jnp.asarray(batch), *map(jnp.asarray, n_active))
-        # gather the whole result tree to host in one transfer (np.asarray
-        # blocks on the computation).  Per-request slicing happens on the
-        # host copy: slicing a device array per ticket is O(batch) dispatches
-        # -- and on a sharded array each one is a cross-device gather that
-        # costs more than the flush's compute (measured ~3x the solve time
-        # at 8 host devices).
-        return jax.tree.map(np.asarray, out)
+        """Blocking compatibility path: ``submit(...).result()``."""
+        return self.submit(fn, batch, n_active).result()
 
     def describe(self) -> str:
         return "local(1 device)"
@@ -139,7 +166,8 @@ class MeshExecutor(LocalExecutor):
         out_struct = jax.eval_shape(fn, *in_struct)
         in_sh = self.rules.sharding_tree(batch_axes(in_struct), self.mesh)
         out_sh = self.rules.sharding_tree(batch_axes(out_struct), self.mesh)
-        return jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
+        return jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                       **_donate_kwargs())
 
     def describe(self) -> str:
         shape = "x".join(f"{k}={v}" for k, v in self.mesh.shape.items())

@@ -1,0 +1,126 @@
+"""Perf-regression gate: row identity matching (exact and widened),
+regression detection, and the added/missing-row tolerance -- driven through
+``compare_docs`` so no git state or benchmark re-run is needed."""
+import importlib.util
+import pathlib
+import sys
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+_spec = importlib.util.spec_from_file_location(
+    "check_bench", REPO_ROOT / "scripts" / "check_bench.py")
+check_bench = importlib.util.module_from_spec(_spec)
+sys.modules["check_bench"] = check_bench
+_spec.loader.exec_module(check_bench)
+
+
+def _doc(rows, section="rows"):
+    return {section: rows}
+
+
+def test_exact_identity_match_flags_regression():
+    base = _doc([{"T": 16, "S": 4, "policy": "tile",
+                  "requests_per_s": 100.0}])
+    ok_doc = _doc([{"T": 16, "S": 4, "policy": "tile",
+                    "requests_per_s": 90.0}])
+    lines, ok = check_bench.compare_docs("x.json", base, ok_doc, tol=0.25)
+    assert ok and any("ok" in ln for ln in lines)
+    bad_doc = _doc([{"T": 16, "S": 4, "policy": "tile",
+                     "requests_per_s": 50.0}])
+    lines, ok = check_bench.compare_docs("x.json", base, bad_doc, tol=0.25)
+    assert not ok and any("REGRESSION" in ln for ln in lines)
+
+
+def test_widened_identity_still_gates_against_predecessor():
+    """A sweep that grows a new identity axis (e.g. ``inflight``) keeps
+    gating: the fresh row whose identity strictly extends the committed
+    row's compares against it; extra fan-out rows are added, not errors."""
+    base = _doc([{"T": 16, "S": 1, "policy": "tile",
+                  "requests_per_s": 100.0}])
+    fresh = _doc([
+        {"T": 16, "S": 1, "policy": "tile", "inflight": 1,
+         "requests_per_s": 40.0},                      # would-be regression
+        {"T": 16, "S": 1, "policy": "tile", "inflight": 2,
+         "requests_per_s": 150.0},                     # new fan-out row
+    ])
+    lines, ok = check_bench.compare_docs("x.json", base, fresh, tol=0.25)
+    assert not ok
+    text = "\n".join(lines)
+    assert "identity widened" in text and "REGRESSION" in text
+    assert any(ln.strip().startswith("NEW") and "inflight=2" in ln
+               for ln in lines)
+    # a healthy widened row passes
+    fresh["rows"][0]["requests_per_s"] = 95.0
+    lines, ok = check_bench.compare_docs("x.json", base, fresh, tol=0.25)
+    assert ok
+
+
+def test_exact_match_claims_baseline_before_widened_rows():
+    """A widened row must never steal the baseline an exact fresh row
+    still matches -- exact matches claim first, regardless of emission
+    order, so the exact row's regression stays gated."""
+    base = _doc([{"T": 16, "requests_per_s": 100.0}])
+    fresh = _doc([
+        {"T": 16, "inflight": 2, "requests_per_s": 150.0},  # widened, first
+        {"T": 16, "requests_per_s": 40.0},                  # exact, regressed
+    ])
+    lines, ok = check_bench.compare_docs("x.json", base, fresh, tol=0.25)
+    assert not ok
+    assert any("REGRESSION" in ln and "identity widened" not in ln
+               for ln in lines)
+    assert any(ln.strip().startswith("NEW") and "inflight=2" in ln
+               for ln in lines)
+
+
+def test_identity_less_base_row_is_never_a_subset_match():
+    """A committed row with no identity fields at all (all floats) would be
+    a 'subset' of everything; it must stay unmatched instead of gating an
+    unrelated widened row."""
+    base = _doc([{"requests_per_s": 100.0}])
+    fresh = _doc([{"T": 16, "inflight": 2, "requests_per_s": 10.0}])
+    lines, ok = check_bench.compare_docs("x.json", base, fresh, tol=0.25)
+    assert ok
+    text = "\n".join(lines)
+    assert "NEW" in text and "MISSING" in text
+
+
+def test_ambiguous_subset_match_stays_unmatched():
+    """Two committed candidates for one widened row: refuse to guess."""
+    base = _doc([
+        {"T": 16, "policy": "tile", "requests_per_s": 100.0},
+        {"S": 4, "policy": "tile", "requests_per_s": 100.0},
+    ])
+    fresh = _doc([{"T": 16, "S": 4, "policy": "tile", "inflight": 1,
+                   "requests_per_s": 10.0}])
+    lines, ok = check_bench.compare_docs("x.json", base, fresh, tol=0.25)
+    assert ok                       # unmatched rows never fail the gate
+    assert any(ln.strip().startswith("NEW") for ln in lines)
+    assert sum("MISSING" in ln for ln in lines) == 2
+
+
+def test_added_and_missing_rows_never_fail():
+    base = _doc([{"backend": "pallas", "us_per_call": 10.0}])
+    fresh = _doc([{"backend": "interpret", "us_per_call": 900.0}])
+    lines, ok = check_bench.compare_docs("x.json", base, fresh, tol=0.25)
+    assert ok
+    text = "\n".join(lines)
+    assert "NEW" in text and "MISSING" in text
+
+
+def test_lower_is_better_metrics():
+    base = _doc([{"name": "mm", "us_per_call": 100.0}])
+    slower = _doc([{"name": "mm", "us_per_call": 200.0}])
+    lines, ok = check_bench.compare_docs("x.json", base, slower, tol=0.25)
+    assert not ok
+    faster = _doc([{"name": "mm", "us_per_call": 50.0}])
+    lines, ok = check_bench.compare_docs("x.json", base, faster, tol=0.25)
+    assert ok
+
+
+def test_metric_must_be_shared_by_both_sides():
+    """A row that grew a preferred metric the committed copy predates is
+    compared on the first metric both rows carry."""
+    base = _doc([{"name": "mm", "us_per_call": 100.0}])
+    fresh = _doc([{"name": "mm", "requests_per_s": 1.0,
+                   "us_per_call": 90.0}])
+    lines, ok = check_bench.compare_docs("x.json", base, fresh, tol=0.25)
+    assert ok and any("us_per_call" in ln for ln in lines)

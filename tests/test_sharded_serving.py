@@ -18,8 +18,8 @@ import jax
 
 from _mesh import run_in_mesh_subprocess as _run
 from repro.core import PCAConfig
-from repro.serving import (BucketPolicy, LocalExecutor, MeshExecutor,
-                           PCAServer, host_mesh, mesh_executor)
+from repro.serving import (BucketPolicy, InFlightFlush, LocalExecutor,
+                           MeshExecutor, PCAServer, host_mesh, mesh_executor)
 
 
 def _sym(n, seed=0):
@@ -64,6 +64,34 @@ def test_mesh_executor_single_device_parity_all_ops():
                     np.asarray(getattr(w, field)), rtol=1e-5, atol=1e-6,
                     err_msg=f"{op}.{field}")
     assert {r.n_shards for r in mesh_srv.stats.records} == {1}
+
+
+@pytest.mark.parametrize("make_executor", [
+    LocalExecutor, lambda: MeshExecutor(mesh=host_mesh(1))])
+def test_executor_submit_is_nonblocking_run_is_submit_result(make_executor):
+    """The dispatch-stage seam: ``submit`` hands back an InFlightFlush whose
+    ``ready``/``block_until_ready``/``result`` drive the pipeline, and
+    ``run`` is exactly the blocking composition of the two."""
+    ex = make_executor()
+    cfg = PCAConfig(T=8, S=2, sweeps=14)
+    fn = ex.compile("eigh", cfg, (8, 8), 2)
+    rng = np.random.default_rng(0)
+    a = rng.standard_normal((2, 8, 8)).astype(np.float32)
+    batch = (a + np.swapaxes(a, 1, 2)) / 2
+    n_active = np.full((2, 2), 8, np.int32)
+    flush = ex.submit(fn, batch, n_active)
+    assert isinstance(flush, InFlightFlush)
+    assert flush.n_shards == ex.n_shards
+    assert flush.block_until_ready() is flush and flush.ready()
+    out = flush.result()
+    assert isinstance(out.eigenvalues, np.ndarray)       # host, not device
+    assert out.eigenvalues.shape == (2, 8)
+    want = ex.run(fn, batch, n_active)
+    np.testing.assert_array_equal(out.eigenvalues, want.eigenvalues)
+    np.testing.assert_array_equal(out.eigenvectors, want.eigenvectors)
+    # an executor-level flush has no engine attached: retire() must refuse
+    with pytest.raises(RuntimeError, match="not attached"):
+        ex.submit(fn, batch, n_active).retire()
 
 
 def test_mesh_executor_rejects_foreign_axis():
@@ -129,16 +157,20 @@ def test_multi_device_flush_in_process():
 # ---------------------------------------------------------------------------
 
 def test_sharded_flush_matches_single_device_all_ops():
+    """Sharded parity -- and, since the sharded server runs a deep
+    pipeline (max_inflight=3), async-over-mesh parity: in-flight sharded
+    flushes must retire to exactly the synchronous local results."""
     out = _run("""
         from repro.core import PCAConfig
         from repro.serving import (BucketPolicy, MeshExecutor, PCAServer,
                                    host_mesh)
         rng = np.random.default_rng(0)
         cfg = PCAConfig(T=8, S=8, sweeps=14)
-        mk = lambda ex: PCAServer(cfg, policy=BucketPolicy(T=8),
-                                  max_batch=8, max_delay_s=1e9, executor=ex)
-        sharded = mk(MeshExecutor(mesh=host_mesh(8)))
-        local = mk(None)
+        sharded = PCAServer(cfg, policy=BucketPolicy(T=8), max_batch=8,
+                            max_delay_s=1e9, max_inflight=3,
+                            executor=MeshExecutor(mesh=host_mesh(8)))
+        local = PCAServer(cfg, policy=BucketPolicy(T=8), max_batch=8,
+                          max_delay_s=1e9)
         sym = [0.5 * (a + a.T) for a in
                [rng.standard_normal((6, 6)).astype(np.float32)
                 for _ in range(8)]]
@@ -160,9 +192,11 @@ def test_sharded_flush_matches_single_device_all_ops():
             errs[op] = err
         errs["n_shards"] = sorted({r.n_shards
                                    for r in sharded.stats.records})
+        errs["inflight_left"] = sharded.inflight()
         print(json.dumps(errs))
     """)
     assert out["n_shards"] == [8]
+    assert out["inflight_left"] == 0
     for op in ("eigh", "svd", "pca"):
         assert out[op] < 1e-5, (op, out)
 
