@@ -1,0 +1,162 @@
+"""Autotuned serving plan vs the hand-picked default: the tuning dividend.
+
+A heterogeneous synthetic trace (bimodal shape mix -- the regime where
+bucket policy, flush size and pipeline depth matter most) is profiled
+under the default ``launch.serve_pca`` plan, the serving-plan autotuner
+(``repro.serving.autotune``) searches the plan grid against that profile,
+and every contender -- default, analytic winner, measured winner -- is
+then *measured* with the identical deterministic replay harness.  The
+committed ``BENCH_autotune_gain.json`` rows are the trajectory the nightly
+CI gate (``scripts/check_bench.py``) enforces: the tuned plan must stay at
+or above the default plan's throughput (within tolerance), and neither may
+regress run-over-run beyond the tolerance.
+
+Acceptance: the tuned plan clears >=1.2x the default plan's requests/s on
+the heterogeneous trace.
+
+Methodology notes: the replay regenerates the profile's traffic
+deterministically (same shapes, seeded matrices, seeded arrival shuffle),
+every plan sees the byte-identical burst, compilation happens in a warmup
+pass (the cost model charges it separately; steady-state serving runs on
+the executable cache), and each row keeps its best-of-``PASSES`` wall time
+-- the same scheduler-noise policy as ``serve_throughput``.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import PCAConfig
+from repro.serving import (ServingPlan, TrafficProfile, autotune, plan_grid,
+                           replay, server_for_plan, synthetic_trace)
+
+from .common import emit, emit_json
+
+TRACE_KIND = "bimodal"
+TRACE_LO, TRACE_HI = 6, 48
+TRACE_SEED = 0
+PASSES = 3
+MEASURE_TOP_K = 3
+CONFIG = PCAConfig(sweeps=10)          # T/S come from each plan
+# the hand-picked tuple the autotuner exists to beat: exactly the
+# launch.serve_pca CLI defaults (tile T=16, S=4, synchronous, local)
+DEFAULT_PLAN = ServingPlan()
+
+
+def capture_profile(mats) -> TrafficProfile:
+    """Profile the trace under the default plan.
+
+    Two passes with telemetry accumulating across both: the first pass
+    compiles (its flushes are cache misses -- that is the compile-cost
+    calibration signal), the second runs steady-state (cache-hit dispatch
+    cost and the device-rate signal).
+    """
+    srv = server_for_plan(DEFAULT_PLAN, CONFIG)
+    for _ in range(2):
+        srv.solve_many(mats)
+    return TrafficProfile.from_stats(srv.stats,
+                                     captured=srv.describe_plan())
+
+
+def run(fast: bool = True) -> None:
+    import jax
+
+    n_req = 64 if fast else 192
+    mats = synthetic_trace(TRACE_KIND, n_req, op="eigh",
+                           lo=TRACE_LO, hi=TRACE_HI, seed=TRACE_SEED)
+    profile = capture_profile(mats)
+    t0 = time.perf_counter()
+    result = autotune(profile, grid=plan_grid(), config=CONFIG,
+                      measure_top_k=MEASURE_TOP_K, seed=TRACE_SEED,
+                      passes=PASSES)
+    tune_s = time.perf_counter() - t0
+    analytic_best = result.scored[0][0]
+
+    # the measured winner often confirms the analytic one; the row is kept
+    # either way (distinct identity via the plan label) so the intra-file
+    # gate always sees a measured-tuned row
+    contenders = [("default", DEFAULT_PLAN), ("analytic", analytic_best),
+                  ("measured", result.best)]
+
+    rows = []
+    base_rps = None
+    for label, plan in contenders:
+        r = replay(profile, plan, config=CONFIG, seed=TRACE_SEED,
+                   passes=PASSES)
+        row = {
+            "plan": label,
+            "policy": plan.mode,
+            "T": plan.T,
+            "pow2_cap": plan.pow2_cap if plan.pow2_cap else 0,
+            "max_batch": plan.max_batch,
+            "inflight": plan.max_inflight,
+            "mesh": plan.mesh,
+            "trace": TRACE_KIND,
+            "n_requests": n_req,
+            "device_count": jax.device_count(),
+            **r,
+        }
+        if label == "default":
+            base_rps = row["requests_per_s"]
+        row["speedup_vs_default"] = (row["requests_per_s"] / base_rps
+                                     if base_rps else float("nan"))
+        rows.append(row)
+        emit(f"autotune_{label}", f"{1e6 / row['requests_per_s']:.1f}",
+             f"rps={row['requests_per_s']:.1f}"
+             f";plan={plan.describe()}"
+             f";waste={row['mean_padding_waste']:.3f}"
+             f";speedup={row['speedup_vs_default']:.2f}")
+
+    tuned_speedup = rows[-1]["speedup_vs_default"]
+    emit("autotune_tuned_speedup", f"{tuned_speedup:.2f}",
+         "acceptance: >=1.2x tuned vs default plan on the bimodal trace")
+
+    emit_json("autotune_gain", {
+        "trace": {"kind": TRACE_KIND, "n_requests": n_req,
+                  "lo": TRACE_LO, "hi": TRACE_HI, "seed": TRACE_SEED},
+        "default_plan": DEFAULT_PLAN.to_json(),
+        "tuned_plan": result.best.to_json(),
+        "tuned_plan_describe": result.best.describe(),
+        "tune_mode": result.mode,
+        "tune_wall_s": tune_s,
+        "analytic_top": result.to_json()["analytic_top"],
+        "measured_refinement": result.measured,
+        "tuned_vs_default_speedup": tuned_speedup,
+        "rows": rows,
+    })
+
+
+def selftest() -> int:
+    """CI smoke: a tiny trace through the full profile -> search -> apply
+    lifecycle; the tuned plan must not lose to the default analytically."""
+    import json
+
+    mats = synthetic_trace(TRACE_KIND, 16, op="eigh", lo=6, hi=24, seed=0)
+    profile = capture_profile(mats)
+    result = autotune(profile, config=CONFIG)
+    default_cost = result.model.plan_cost(DEFAULT_PLAN, profile)
+    best_cost = result.scored[0][1]
+    assert best_cost["total_s"] <= default_cost["total_s"], (
+        best_cost, default_cost)
+    srv = server_for_plan(DEFAULT_PLAN, CONFIG)
+    srv.apply_plan(result.best)
+    srv.solve_many(mats)
+    print("autotune_gain selftest ok:", json.dumps({
+        "tuned_plan": result.best.describe(),
+        "est_speedup": round(default_cost["total_s"]
+                             / best_cost["total_s"], 2)}))
+    return 0
+
+
+if __name__ == "__main__":
+    import argparse
+    import sys
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--selftest", action="store_true",
+                    help="tiny profile->search->apply smoke and exit")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    if args.selftest:
+        sys.exit(selftest())
+    print("name,us_per_call,derived")
+    run(fast=not args.full)

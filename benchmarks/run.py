@@ -9,6 +9,7 @@ Prints ``name,us_per_call,derived`` CSV.
   table3-- resource/config comparison (paper Tables I-III)
   roofline -- (arch x shape) roofline terms from the dry-run records
   serve -- batched multi-tenant serving throughput (repro.serving)
+  autotune -- tuned-vs-default serving-plan gain (serving.autotune)
 """
 import argparse
 import sys
@@ -23,9 +24,9 @@ def main() -> None:
                     help="larger sweeps (slow on CPU)")
     args = ap.parse_args()
 
-    from . import (dse, fig1_bottlenecks, fig6_exec_time, fig7_energy,
-                   fig8_frobenius, perf_variants, roofline, serve_throughput,
-                   table3_configs)
+    from . import (autotune_gain, dse, fig1_bottlenecks, fig6_exec_time,
+                   fig7_energy, fig8_frobenius, perf_variants, roofline,
+                   serve_throughput, table3_configs)
     suite = {
         "table3": table3_configs,
         "fig8": fig8_frobenius,
@@ -36,6 +37,7 @@ def main() -> None:
         "roofline": roofline,
         "perf": perf_variants,
         "serve": serve_throughput,
+        "autotune": autotune_gain,
     }
     only = set(args.only.split(",")) if args.only else None
     print("name,us_per_call,derived")

@@ -25,9 +25,17 @@ reported but never fail the gate -- a benchmark may legitimately emit
 fewer rows in a reduced environment (e.g. the single-device CI job skips
 the multi-device sweep) or grow new rows in the PR under test.
 
+``BENCH_autotune_gain.json`` additionally carries an *intra-file* gate: its
+tuned-plan rows (``plan`` analytic/measured) must stay at or above the
+default-plan row's throughput within the tolerance -- an autotuner that
+"wins" the search but loses the measurement is a cost-model bug, and the
+gate catches it even when the file was not re-emitted this run (the
+committed rows themselves must honor the invariant).
+
 A file whose content is byte-identical to HEAD was not re-emitted this run
-and is skipped.  The tolerance (default 25% from the CI issue) can be
-loosened for noisy hosts with ``--tol 0.4`` or ``CHECK_BENCH_TOL=0.4``.
+and is skipped for the row-vs-HEAD diff.  The tolerance (default 25% from
+the CI issue) can be loosened for noisy hosts with ``--tol 0.4`` or
+``CHECK_BENCH_TOL=0.4``.
 
 Exit codes: 0 ok / nothing comparable, 1 regression, 2 usage error.
 """
@@ -106,19 +114,58 @@ def pop_subset_match(base_rows: dict, section: str, fresh_key: tuple):
     return base_rows.pop(candidates[0])
 
 
+def autotune_gate(name: str, doc: dict, tol: float) -> tuple[list, bool]:
+    """Intra-file invariant for BENCH_autotune_gain.json: every tuned-plan
+    row must hold >= the default-plan row's throughput within ``tol``
+    (the autotuner must never ship a plan that loses to the hand-picked
+    default it searched against)."""
+    rows = [r for _, r in iter_rows(doc) if isinstance(r.get("plan"), str)]
+    defaults = [r for r in rows if r["plan"] == "default"
+                and isinstance(r.get("requests_per_s"), (int, float))]
+    if not defaults:
+        return [f"{name}: no default-plan row; autotune gate skipped"], True
+    base = max(float(r["requests_per_s"]) for r in defaults)
+    lines, ok = [], True
+    for r in rows:
+        if r["plan"] == "default" or not isinstance(
+                r.get("requests_per_s"), (int, float)):
+            continue
+        rps = float(r["requests_per_s"])
+        ratio = rps / base if base > 0 else float("inf")
+        verdict = "ok"
+        if rps < base * (1.0 - tol):
+            verdict, ok = "BELOW-DEFAULT", False
+        lines.append(f"  {verdict:<13} tuned[{r['plan']}] "
+                     f"{rps:.1f} vs default {base:.1f} rps "
+                     f"({ratio:.2f}x)")
+    header = (f"{name}: autotune gate (tuned >= default within "
+              f"{tol * 100:.0f}%)")
+    return [header] + lines, ok
+
+
 def compare_file(name: str, tol: float) -> tuple[list, bool]:
     """Returns (report lines, ok)."""
     fresh_path = REPO_ROOT / name
     if not fresh_path.exists():
         return [f"{name}: absent from working tree; skipped"], True
+    fresh_text = fresh_path.read_text()
+    extra_lines: list = []
+    extra_ok = True
+    if name == "BENCH_autotune_gain.json":
+        # intra-file gate runs on the working-tree copy whether or not it
+        # was re-emitted: committed rows must honor the invariant too
+        extra_lines, extra_ok = autotune_gate(name, json.loads(fresh_text),
+                                              tol)
     base_text = committed_copy(name)
     if base_text is None:
-        return [f"{name}: not in HEAD (new benchmark); skipped"], True
-    fresh_text = fresh_path.read_text()
+        return ([f"{name}: not in HEAD (new benchmark); diff skipped"]
+                + extra_lines), extra_ok
     if fresh_text == base_text:
-        return [f"{name}: identical to HEAD (not re-emitted); skipped"], True
-    return compare_docs(name, json.loads(base_text), json.loads(fresh_text),
-                        tol)
+        return ([f"{name}: identical to HEAD (not re-emitted); diff "
+                 f"skipped"] + extra_lines), extra_ok
+    lines, ok = compare_docs(name, json.loads(base_text),
+                             json.loads(fresh_text), tol)
+    return lines + extra_lines, ok and extra_ok
 
 
 def compare_docs(name: str, base_doc: dict, fresh_doc: dict,

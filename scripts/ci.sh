@@ -5,7 +5,10 @@
 #      here first, not as 28 cryptic kernel failures), plus
 #      jax.device_count() and the mesh shape the sharded smoke will
 #      resolve to (device-visibility drift shows up in the log header
-#      instead of as parity failures)
+#      instead of as parity failures), plus the serving plan the
+#      autotuner picks for a canned reference trace (cost-model drift
+#      shows up as a changed banner plan before it shows up as a
+#      BENCH_autotune_gain gate failure)
 #   2. serving smoke        -- submit -> bucket -> batch -> cache -> unpack,
 #      including a sharded-flush parity leg over every visible device and
 #      an async-pipeline leg (sync-vs-async bit-for-bit parity on a mixed
@@ -34,6 +37,11 @@ print(backends.describe())
 print(f"devices: jax.device_count()={jax.device_count()} "
       f"({jax.default_backend()})")
 print(f"sharded smoke resolves to: {mesh_executor('auto').describe()}")
+from repro.serving import TrafficProfile, autotune
+profile = TrafficProfile.from_shapes(
+    [("eigh", (12, 12), 24), ("eigh", (40, 40), 8)])
+print(f"autotuned plan (reference bimodal trace): "
+      f"{autotune(profile).best.describe()}")
 EOF
 
 echo "== serving smoke (serve_pca --selftest) =="

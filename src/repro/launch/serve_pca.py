@@ -18,10 +18,21 @@ Async pipeline (up to N flushes in flight; host batching overlaps device
 execution -- N=1 is the synchronous engine):
   PYTHONPATH=src python -m repro.launch.serve_pca --inflight 4
 
+Traffic-driven autotuning (capture a profile of the observed traffic, score
+the serving-plan grid analytically, optionally measure the top candidates,
+hot-swap the winner onto the live server before the timed pass):
+  PYTHONPATH=src python -m repro.launch.serve_pca --autotune analytic \
+      --profile-out /tmp/traffic.json
+  PYTHONPATH=src python -m repro.launch.serve_pca --autotune measured \
+      --profile-in /tmp/traffic.json
+
 CI smoke (exercises submit/flush/cache + checks results against numpy;
-includes a sharded-flush parity leg over every visible device and an
-async-pipeline leg: a mixed burst must match the synchronous engine
-bit-for-bit while the in-flight depth telemetry shows real pipelining):
+includes a sharded-flush parity leg over every visible device, an
+async-pipeline leg -- a mixed burst must match the synchronous engine
+bit-for-bit while the in-flight depth telemetry shows real pipelining --
+and an autotune leg: the tuned plan must serve the same burst bit-identical
+to the default plan, and a mid-stream ``apply_plan`` hot-swap must be
+bit-identical to a cold server built with the plan):
   PYTHONPATH=src python -m repro.launch.serve_pca --selftest
 """
 from __future__ import annotations
@@ -35,20 +46,25 @@ import numpy as np
 
 from repro.core import PCAConfig
 from repro.core.memory_model import VIRTEX_US
-from repro.serving import BucketPolicy, PCAServer, POLICIES, mesh_executor
+from repro.serving import (BucketPolicy, PCAServer, POLICIES, TrafficProfile,
+                           autotune, mesh_executor, plan_grid,
+                           server_for_plan)
+from repro.serving.autotune import synthesize
 
 
 def mixed_traffic(n_req: int, op: str, dims, seed: int = 0):
-    """Synthetic heterogeneous request stream (shared with the benchmark)."""
+    """Synthetic heterogeneous request stream (shared with the benchmark).
+
+    Matrix construction is ``serving.autotune.synthesize`` -- the same
+    generator the autotuner's profile replay uses, so CLI traffic and
+    replayed traffic stay comparable by construction.
+    """
     rng = np.random.default_rng(seed)
     mats = []
     for i in range(n_req):
         n = int(dims[i % len(dims)])
-        if op == "eigh":
-            a = rng.standard_normal((n, n)).astype(np.float32)
-            mats.append((a + a.T) / 2)
-        else:  # svd / pca: tall rectangular data matrices
-            mats.append(rng.standard_normal((4 * n, n)).astype(np.float32))
+        shape = (n, n) if op == "eigh" else (4 * n, n)
+        mats.append(synthesize(op, shape, rng))
     return mats
 
 
@@ -109,6 +125,45 @@ def selftest() -> int:
     assert async_summary["max_inflight_depth"] > 1, async_summary
     assert pipelined.inflight() == 0
 
+    # autotune leg: capture a profile of the live traffic, tune over the
+    # scheduling axes (max_batch / max_inflight; bucketing pinned to the
+    # default policy, under which batching and pipelining provably do not
+    # change the math), and require the tuned plan to serve the identical
+    # burst *bit-for-bit* equal to the default plan.  Then the hot-swap
+    # parity: a server that switches onto the plan mid-stream via
+    # ``apply_plan`` must match a cold server built with the plan
+    # bit-for-bit too (same executables, same slabs), with the switch
+    # visible in telemetry.  The profile must survive its JSON round trip
+    # exactly -- that is the capture-once / replay-in-CI contract.
+    cfg = PCAConfig(T=8, S=4, sweeps=14)
+    profile = TrafficProfile.from_stats(srv.stats,
+                                        captured=srv.describe_plan())
+    assert TrafficProfile.from_json(profile.to_json()) == profile
+    sched_grid = plan_grid(modes=("tile",), tiles=(8,),
+                           batches=(1, 2, 4, 8), inflights=(1, 2, 4))
+    tuned = autotune(profile, grid=sched_grid, config=cfg).best
+    default_results = srv.solve_many(mats, op="eigh")
+    cold = server_for_plan(tuned, cfg)
+    hot = PCAServer(cfg, policy=BucketPolicy(T=8), max_delay_s=10.0)
+    early = [hot.submit(m) for m in mats[:3]]   # queued across the swap
+    hot.apply_plan(tuned)                       # re-buckets them in place
+    for results in (cold.solve_many(mats, op="eigh"),
+                    hot.solve_many(mats, op="eigh")):
+        for g, w in zip(results, default_results):
+            for field in (f.name for f in dataclasses.fields(g)):
+                np.testing.assert_array_equal(
+                    np.asarray(getattr(g, field)),
+                    np.asarray(getattr(w, field)),
+                    err_msg=f"tuned-vs-default eigh.{field}")
+    # the tickets that crossed the swap retired under the new plan with
+    # the same bits the default plan would have produced
+    for t, w in zip(early, default_results):
+        assert t.done
+        np.testing.assert_array_equal(t.result().eigenvalues,
+                                      w.eigenvalues)
+    assert len(hot.stats.plan_switches) == 1, hot.stats.plan_switches
+    assert hot.stats.summary()["plan_switches"] == 1
+
     print("serve_pca selftest ok:",
           json.dumps({k: round(v, 4) for k, v in summary.items()}))
     print("serve_pca sharded selftest ok:", json.dumps({
@@ -116,6 +171,10 @@ def selftest() -> int:
     print("serve_pca async selftest ok:", json.dumps({
         "max_inflight_depth": async_summary["max_inflight_depth"],
         "overlap_frac": round(async_summary["overlap_frac"], 4)}))
+    print("serve_pca autotune selftest ok:", json.dumps({
+        "tuned_plan": tuned.describe(),
+        "profile_requests": profile.requests,
+        "hot_swap_requeued": hot.stats.plan_switches[0]["requeued"]}))
     return 0
 
 
@@ -148,6 +207,25 @@ def main(argv=None) -> int:
                     help="flush deadline per queued request")
     ap.add_argument("--sweeps", type=int, default=12)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--autotune", default="off",
+                    choices=("off", "analytic", "measured"),
+                    help="pick the serving plan from observed traffic "
+                         "instead of the CLI flags: 'analytic' scores the "
+                         "plan grid with the calibrated cost model; "
+                         "'measured' additionally replays the profile "
+                         "against live servers for the analytic top-K and "
+                         "keeps the measured best.  The winner is "
+                         "hot-swapped onto the server (apply_plan) before "
+                         "the timed pass")
+    ap.add_argument("--measure-top-k", type=int, default=3,
+                    help="how many analytic-best plans the 'measured' "
+                         "mode replays")
+    ap.add_argument("--profile-in", default=None,
+                    help="tune against a previously captured traffic "
+                         "profile JSON instead of profiling this run")
+    ap.add_argument("--profile-out", default=None,
+                    help="write the captured traffic profile JSON here "
+                         "(capture once, replay in CI)")
     ap.add_argument("--selftest", action="store_true",
                     help="run the 2-second smoke and exit")
     args = ap.parse_args(argv)
@@ -166,6 +244,31 @@ def main(argv=None) -> int:
                     max_inflight=args.inflight)
     mats = mixed_traffic(args.requests, args.op, dims, args.seed)
     srv.solve_many(mats, op=args.op)       # warmup: compile the buckets
+    # the warmup pass doubles as the profiling pass: its telemetry is the
+    # traffic profile the autotuner scores plans against.  --profile-out
+    # always writes *this run's* captured profile, even when the tuner is
+    # fed a replayed one via --profile-in
+    captured = TrafficProfile.from_stats(srv.stats,
+                                         captured=srv.describe_plan())
+    if args.profile_out:
+        captured.save(args.profile_out)
+    profile = (TrafficProfile.load(args.profile_in) if args.profile_in
+               else captured)
+    tune_info = None
+    if args.autotune != "off":
+        # the CLI's mesh choice joins the executor axis of the grid, so a
+        # requested mesh is kept unless the tuner finds single-device
+        # genuinely better -- never silently dropped
+        meshes = (("none",) if args.mesh in ("none", "local")
+                  else ("none", args.mesh))
+        result = autotune(
+            profile, grid=plan_grid(meshes=meshes), config=config,
+            measure_top_k=(args.measure_top_k
+                           if args.autotune == "measured" else 0),
+            seed=args.seed)
+        srv.apply_plan(result.best)
+        srv.solve_many(mats, op=args.op)   # re-warmup under the tuned plan
+        tune_info = result.to_json()
     srv.stats.reset()
     srv.solve_many(mats, op=args.op)
     summary = srv.stats.summary()
@@ -178,6 +281,8 @@ def main(argv=None) -> int:
                    "timeout_ms": args.timeout_ms,
                    "executor": executor.describe(),
                    "max_inflight": args.inflight},
+        "plan": srv.describe_plan(),
+        "autotune": tune_info,
         "summary": summary,
         "fabric_model": {
             "reference": "MANOJAVAM(16,32)@Virtex-US+",

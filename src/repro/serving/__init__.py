@@ -12,8 +12,15 @@ requests.  Flush *timing* is a pipeline (``inflight``): executors launch
 without blocking, a bounded in-flight queue holds launched flushes, and
 retirement unpacks them into tickets -- ``PCAServer(max_inflight=N)``
 overlaps host-side batching with device execution (N=1 is the synchronous
-engine).
+engine).  The whole (policy, T, pow2 cap, S, inflight, executor) tuple is a
+``ServingPlan`` the traffic-driven autotuner (``autotune``) searches from a
+captured ``TrafficProfile`` and hot-swaps onto a live server via
+``PCAServer.apply_plan``.
 """
+from .autotune import (AutotuneResult, CostModel, ServingPlan,
+                       TrafficProfile, TRACE_KINDS, autotune, plan_grid,
+                       replay, server_for_plan, solve_work, synthetic_trace,
+                       trace_dims)
 from .batching import (BucketPolicy, POLICIES, pad_to_bucket, padding_waste,
                        stack_requests)
 from .engine import (BackendRouter, OPS, PCAServer, ServedEigh, ServedPCA,
@@ -27,13 +34,15 @@ from .solver import (BatchedEighResult, BatchedPCAResult, BatchedSVDResult,
 from .stats import FlushRecord, RequestRecord, ServingStats, percentile
 
 __all__ = [
-    "BackendRouter", "BatchedEighResult", "BatchedPCAResult",
-    "BatchedSVDResult", "BucketPolicy", "FlushRecord", "InFlightFlush",
-    "InFlightQueue", "LocalExecutor", "MeshExecutor",
-    "OPS", "PCAServer", "POLICIES", "RequestRecord", "ServedEigh",
-    "ServedPCA", "ServedSVD", "ServingStats", "Ticket", "build_solver_fn",
-    "host_mesh", "jacobi_eigh_batched", "jacobi_svd_batched",
-    "mesh_executor", "pad_to_bucket", "padding_waste", "pca_fit_batched",
-    "pca_transform_batched", "percentile", "stack_requests",
-    "threshold_router",
+    "AutotuneResult", "BackendRouter", "BatchedEighResult",
+    "BatchedPCAResult", "BatchedSVDResult", "BucketPolicy", "CostModel",
+    "FlushRecord", "InFlightFlush", "InFlightQueue", "LocalExecutor",
+    "MeshExecutor", "OPS", "PCAServer", "POLICIES", "RequestRecord",
+    "ServedEigh", "ServedPCA", "ServedSVD", "ServingPlan", "ServingStats",
+    "Ticket", "TrafficProfile", "TRACE_KINDS", "autotune",
+    "build_solver_fn", "host_mesh", "jacobi_eigh_batched",
+    "jacobi_svd_batched", "mesh_executor", "pad_to_bucket",
+    "padding_waste", "pca_fit_batched", "pca_transform_batched",
+    "percentile", "plan_grid", "replay", "server_for_plan", "solve_work",
+    "stack_requests", "synthetic_trace", "threshold_router", "trace_dims",
 ]

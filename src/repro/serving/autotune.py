@@ -1,0 +1,535 @@
+"""Traffic-driven serving-plan autotuning: pick (policy, T, pow2 cap,
+max_batch, max_inflight, executor) from observed traffic.
+
+MANOJAVAM's two-tier cache and mode-aware memory policies adapt the fabric
+to the access patterns of covariance vs rotation work; the software MPU
+adapts the same way, but to *traffic*: the right bucket policy, tile size,
+flush size and pipeline depth depend on the shape mix and arrival pattern
+the server actually sees, not on a hand-picked tuple.  This module closes
+the seam PR 4 left open (``ServingStats.flush_records`` +
+``inflight_depths``) with the classic autotuned-search loop (TVM/Ansor
+style, applied to the Jacobi/matmul serving fabric):
+
+  profile    ``TrafficProfile.from_stats`` condenses live telemetry into a
+             JSON-round-trippable artifact: per-(op, shape) histograms,
+             arrival rate, padding-waste and host/device-overlap
+             aggregates, and the calibration signals (dispatch cost split
+             by cache hit/miss, device seconds per unit bucket-work).
+             Capture once in production, replay forever in CI.
+  search     ``autotune`` scores every ``ServingPlan`` in a small discrete
+             grid with an analytical ``CostModel`` (bucket area x flush
+             count, recompile amortization charged per executable the plan
+             needs, pipeline occupancy derived from the plan's depth and
+             the profile's measured ``overlap_frac``), optionally
+             refining the analytic top-K by *measuring*: ``replay``
+             regenerates the profile's traffic deterministically and
+             times it against a live ``PCAServer`` built from the plan.
+  apply      ``PCAServer.apply_plan`` hot-swaps the winner between
+             flushes: in-flight work retires first, queued tickets are
+             re-bucketed in place, and the switch lands in
+             ``stats.plan_switches``.
+
+The cost model is deliberately simple -- every term is a quantity the
+telemetry already measures -- because its job is *ranking* a few dozen
+plans, not predicting wall time: the measured refinement exists precisely
+so close calls are settled by the hardware.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import json
+import math
+import pathlib
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.pca import PCAConfig
+from .batching import BucketPolicy, POLICIES
+from .sharded import LocalExecutor, mesh_executor
+from .stats import ServingStats
+
+TRACE_KINDS = ("uniform", "bimodal", "heavy")
+
+
+def solve_work(op: str, bucket: Sequence[int]) -> float:
+    """Bucket-work units of one problem: the O(.) the Jacobi datapath does.
+
+    eigh on an (n, n) bucket is n^3-ish (sweeps x rotations x row/col
+    updates); svd/pca on (m, n) add the m n^2 Gram/standardize streaming
+    pass in front of the n^3 eigensolve.  Constant factors cancel in
+    ranking; the calibrated ``CostModel.device_work_per_s`` absorbs them
+    when real flush telemetry is available.
+    """
+    if len(bucket) == 1 or op == "eigh":
+        n = float(bucket[-1])
+        return n * n * n
+    m, n = float(bucket[0]), float(bucket[-1])
+    return m * n * n + n * n * n
+
+
+# ---------------------------------------------------------------------------
+# the plan
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ServingPlan:
+    """One point of the serving-policy space ``PCAServer`` can run under.
+
+    ``mesh`` is the executor choice in ``sharded.mesh_executor`` spelling:
+    ``"none"`` (single device), ``"auto"`` (every visible device) or an
+    integer-string N.  The default instance is exactly the
+    ``launch.serve_pca`` CLI's defaults -- the hand-picked tuple the
+    autotuner exists to beat.
+    """
+    mode: str = "tile"
+    T: int = 16
+    pow2_cap: Optional[int] = None
+    max_batch: int = 4
+    max_inflight: int = 1
+    mesh: str = "none"
+
+    def policy(self) -> BucketPolicy:
+        return BucketPolicy(T=self.T, mode=self.mode,
+                            pow2_cap=self.pow2_cap)
+
+    def build_executor(self) -> LocalExecutor:
+        return mesh_executor(self.mesh)
+
+    def n_shards(self) -> int:
+        """Data-axis shards the plan's executor would spread a flush over
+        (without instantiating a mesh -- cost scoring must stay cheap)."""
+        if self.mesh in (None, "none", "local"):
+            return 1
+        import jax
+        n = (jax.device_count() if self.mesh == "auto"
+             else min(int(self.mesh), jax.device_count()))
+        return max(n, 1)
+
+    def describe(self) -> str:
+        cap = f"<=cap{self.pow2_cap}" if self.pow2_cap else ""
+        return (f"{self.mode}{cap}(T={self.T}) S={self.max_batch} "
+                f"inflight={self.max_inflight} mesh={self.mesh}")
+
+    def to_json(self) -> Dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_json(cls, doc: Dict) -> "ServingPlan":
+        return cls(**{f.name: doc[f.name]
+                      for f in dataclasses.fields(cls) if f.name in doc})
+
+
+def plan_grid(modes: Sequence[str] = POLICIES,
+              tiles: Sequence[int] = (8, 16, 32),
+              pow2_caps: Sequence[Optional[int]] = (None,),
+              batches: Sequence[int] = (4, 8, 16, 32),
+              inflights: Sequence[int] = (1, 2, 4),
+              meshes: Sequence[str] = ("none",)) -> List[ServingPlan]:
+    """The small discrete search grid (exhaustive scoring is cheap).
+
+    pow2 caps that are not a multiple of a tile size are skipped for that
+    tile rather than raising, so one cap list can serve mixed tile lists.
+    """
+    plans = []
+    for mode in modes:
+        caps = pow2_caps if mode == "pow2" else (None,)
+        for T in tiles:
+            for cap in caps:
+                if cap is not None and (cap < T or cap % T):
+                    continue
+                for S in batches:
+                    for depth in inflights:
+                        for mesh in meshes:
+                            plans.append(ServingPlan(
+                                mode=mode, T=T, pow2_cap=cap, max_batch=S,
+                                max_inflight=depth, mesh=mesh))
+    return plans
+
+
+# ---------------------------------------------------------------------------
+# the profile
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TrafficProfile:
+    """What the server observed, condensed for scoring and replay.
+
+    ``shape_counts`` is the per-op shape histogram -- the replayable part.
+    The aggregates are the cost-model calibration signals; all of them are
+    exact zeros (never NaN) when the capture window saw no traffic, so a
+    profile of an idle server is well-defined (see
+    ``ServingStats.summary``'s same contract).
+    """
+    shape_counts: Tuple[Tuple[str, Tuple[int, ...], int], ...]
+    requests: int = 0
+    duration_s: float = 0.0
+    arrival_rate: float = 0.0        # requests/s over the capture span
+    mean_padding_waste: float = 0.0  # under the *captured* plan's buckets
+    flushes: int = 0
+    mean_flush_batch: float = 0.0    # live requests per flush
+    mean_dispatch_hit_s: float = 0.0   # host cost/flush, executable cached
+    mean_dispatch_miss_s: float = 0.0  # host cost/flush incl. compilation
+    host_s: float = 0.0              # total dispatch-stage host seconds
+    device_s: float = 0.0            # total launch-to-retire seconds
+    work_dispatched: float = 0.0     # padded problems x solve_work, summed
+    overlap_frac: float = 0.0        # measured host/device overlap
+    captured: Tuple[Tuple[str, object], ...] = ()  # plan it ran under
+
+    @classmethod
+    def from_stats(cls, stats: ServingStats,
+                   captured: Optional[Dict] = None) -> "TrafficProfile":
+        recs = list(stats.records)
+        counts = collections.Counter(
+            (r.op, tuple(int(d) for d in r.shape)) for r in recs)
+        shape_counts = tuple(sorted(
+            (op, shape, n) for (op, shape), n in counts.items()))
+        span = (max(r.t_done for r in recs) - min(r.t_submit for r in recs)
+                if recs else 0.0)
+        fr = list(stats.flush_records)
+        hit = [f.dispatch_s for f in fr if f.cache_hit]
+        miss = [f.dispatch_s for f in fr if not f.cache_hit]
+        overlap_s = float(sum(f.overlap_s for f in fr))
+        inflight_s = overlap_s + float(sum(f.wait_s for f in fr))
+        return cls(
+            shape_counts=shape_counts,
+            requests=len(recs),
+            duration_s=float(span),
+            arrival_rate=len(recs) / span if span > 0 else 0.0,
+            mean_padding_waste=(float(np.mean(
+                [r.padding_waste for r in recs])) if recs else 0.0),
+            flushes=len(fr),
+            mean_flush_batch=(float(np.mean([f.batch_size for f in fr]))
+                              if fr else 0.0),
+            mean_dispatch_hit_s=float(np.mean(hit)) if hit else 0.0,
+            mean_dispatch_miss_s=float(np.mean(miss)) if miss else 0.0,
+            host_s=float(sum(f.dispatch_s for f in fr)),
+            device_s=inflight_s,
+            work_dispatched=float(sum(
+                f.padded_batch * solve_work(f.op, f.bucket)
+                for f in fr if f.bucket)),
+            overlap_frac=(overlap_s / inflight_s if inflight_s > 0 else 0.0),
+            captured=tuple(sorted((captured or {}).items())),
+        )
+
+    @classmethod
+    def from_shapes(cls, shape_counts, **aggregates) -> "TrafficProfile":
+        """A profile straight from an (op, shape, count) histogram -- for
+        banners, tests and hand-written what-if scenarios."""
+        norm = tuple(sorted((op, tuple(int(d) for d in shape), int(n))
+                            for op, shape, n in shape_counts))
+        return cls(shape_counts=norm,
+                   requests=sum(n for _, _, n in norm), **aggregates)
+
+    @property
+    def captured_plan(self) -> Dict:
+        return dict(self.captured)
+
+    # -- JSON round trip ----------------------------------------------------
+    def to_json(self) -> str:
+        doc = dataclasses.asdict(self)
+        doc["shape_counts"] = [[op, list(shape), n]
+                               for op, shape, n in self.shape_counts]
+        doc["captured"] = self.captured_plan
+        return json.dumps({"traffic_profile": 1, **doc}, indent=2,
+                          sort_keys=True) + "\n"
+
+    @classmethod
+    def from_json(cls, text: str) -> "TrafficProfile":
+        doc = json.loads(text)
+        doc.pop("traffic_profile", None)
+        doc["shape_counts"] = tuple(
+            (op, tuple(int(d) for d in shape), int(n))
+            for op, shape, n in doc["shape_counts"])
+        doc["captured"] = tuple(sorted(doc.get("captured", {}).items()))
+        return cls(**{f.name: doc[f.name]
+                      for f in dataclasses.fields(cls) if f.name in doc})
+
+    def save(self, path) -> None:
+        pathlib.Path(path).write_text(self.to_json())
+
+    @classmethod
+    def load(cls, path) -> "TrafficProfile":
+        return cls.from_json(pathlib.Path(path).read_text())
+
+
+# ---------------------------------------------------------------------------
+# synthetic traffic (deterministic generators for tests, CI and replay)
+# ---------------------------------------------------------------------------
+
+def trace_dims(kind: str, n: int, lo: int = 6, hi: int = 48,
+               seed: int = 0) -> List[int]:
+    """Deterministic dimension stream for a named traffic shape.
+
+    uniform: flat over [lo, hi]; bimodal: a small-matrix mode near ``lo``
+    and a large mode near ``hi`` (the heterogeneous mix where bucket
+    policies differ most); heavy: Pareto-tailed around ``lo`` (most
+    requests tiny, rare huge ones -- the regime where pow2 caps pay).
+    """
+    if kind not in TRACE_KINDS:
+        raise ValueError(f"unknown trace kind {kind!r}; one of {TRACE_KINDS}")
+    rng = np.random.default_rng(seed)
+    if kind == "uniform":
+        dims = rng.integers(lo, hi + 1, size=n)
+    elif kind == "bimodal":
+        small = rng.normal(lo + 2, 1.5, size=n)
+        large = rng.normal(hi - 4, 3.0, size=n)
+        pick = rng.random(n) < 0.65      # small mode dominates
+        dims = np.where(pick, small, large)
+    else:  # heavy
+        dims = lo + rng.pareto(1.5, size=n) * 3.0
+    return [int(d) for d in np.clip(np.round(dims), lo, hi)]
+
+
+def synthesize(op: str, shape: Sequence[int], rng) -> np.ndarray:
+    """One request matrix for (op, shape): symmetric for eigh, tall data
+    for svd/pca -- matching ``launch.serve_pca.mixed_traffic``."""
+    if op == "eigh":
+        n = int(shape[-1])
+        a = rng.standard_normal((n, n)).astype(np.float32)
+        return (a + a.T) / 2
+    m, n = int(shape[0]), int(shape[1])
+    return rng.standard_normal((m, n)).astype(np.float32)
+
+
+def synthetic_trace(kind: str, n: int, op: str = "eigh", lo: int = 6,
+                    hi: int = 48, seed: int = 0) -> List[np.ndarray]:
+    """A deterministic heterogeneous request burst of a named shape."""
+    rng = np.random.default_rng(seed + 1)
+    mats = []
+    for d in trace_dims(kind, n, lo=lo, hi=hi, seed=seed):
+        shape = (d, d) if op == "eigh" else (4 * d, d)
+        mats.append(synthesize(op, shape, rng))
+    return mats
+
+
+def request_sequence(profile: TrafficProfile,
+                     seed: int = 0) -> List[Tuple[str, Tuple[int, ...]]]:
+    """The profile's histogram expanded into a deterministic arrival order
+    (a seeded shuffle -- histograms forget ordering, and a sorted replay
+    would batch unrealistically well)."""
+    reqs = [(op, shape) for op, shape, n in profile.shape_counts
+            for _ in range(n)]
+    order = np.random.default_rng(seed).permutation(len(reqs))
+    return [reqs[i] for i in order]
+
+
+# ---------------------------------------------------------------------------
+# the cost model
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class CostModel:
+    """Analytical score of (plan, profile) -> estimated seconds to serve.
+
+    Three terms, each a telemetry-calibratable quantity:
+
+      device   bucket area (to the solve-work power) x padded batch x
+               flush count / device rate -- the padding-waste and
+               batching term: bigger buckets and emptier flushes cost.
+      host     per-flush dispatch cost (stack/pad/launch/unpack), minus
+               the fraction the plan's pipeline depth hides behind device
+               execution.  Occupancy is ``1 - 1/max_inflight`` scaled by
+               the efficiency the profile actually measured
+               (``overlap_frac``) when it was captured under a pipelined
+               plan -- a host that never reached its theoretical overlap
+               will not magically reach it under the candidate either.
+      compile  one charge per distinct executable the plan needs
+               (op x bucket x padded-batch), amortized against the
+               executable cache: steady-state traffic compiles once, so
+               plans that shatter traffic across many buckets pay here.
+    """
+    device_work_per_s: float = 2.0e9
+    host_s_per_flush: float = 1.0e-3
+    host_s_per_request: float = 3.0e-5
+    compile_s_per_executable: float = 0.25
+
+    @classmethod
+    def calibrated(cls, profile: TrafficProfile) -> "CostModel":
+        """Constants from the profile's own telemetry where available."""
+        m = cls()
+        if profile.mean_dispatch_hit_s > 0:
+            m.host_s_per_flush = max(
+                profile.mean_dispatch_hit_s
+                - m.host_s_per_request * profile.mean_flush_batch, 1e-6)
+        if profile.mean_dispatch_miss_s > profile.mean_dispatch_hit_s > 0:
+            m.compile_s_per_executable = (profile.mean_dispatch_miss_s
+                                          - profile.mean_dispatch_hit_s)
+        if profile.work_dispatched > 0 and profile.device_s > 0:
+            m.device_work_per_s = profile.work_dispatched / profile.device_s
+        return m
+
+    def occupancy(self, plan: ServingPlan,
+                  profile: TrafficProfile) -> float:
+        """Fraction of per-flush host cost the plan's pipeline hides."""
+        if plan.max_inflight <= 1:
+            return 0.0
+        ceiling = 1.0 - 1.0 / plan.max_inflight
+        captured = profile.captured_plan
+        cap_depth = int(captured.get("max_inflight", 1) or 1)
+        if cap_depth > 1 and profile.overlap_frac > 0:
+            # the profile measured real overlap under a pipelined plan:
+            # trust its efficiency relative to that plan's own ceiling
+            eff = profile.overlap_frac / (1.0 - 1.0 / cap_depth)
+            return ceiling * float(np.clip(eff, 0.1, 1.0))
+        return ceiling
+
+    def plan_cost(self, plan: ServingPlan,
+                  profile: TrafficProfile) -> Dict[str, float]:
+        """Score one plan against one profile (lower total_s is better)."""
+        policy = plan.policy()
+        shards = plan.n_shards()
+        per_bucket: Dict[Tuple, int] = collections.Counter()
+        waste_num = 0.0
+        for op, shape, n in profile.shape_counts:
+            bucket = policy.bucket_shape(shape)
+            per_bucket[(op, bucket)] += n
+            true = float(np.prod([int(d) for d in shape]))
+            padded = float(np.prod(bucket))
+            waste_num += n * (1.0 - true / padded)
+        occupancy = self.occupancy(plan, profile)
+        device_s = host_s = hidden_s = 0.0
+        n_exec = 0
+        padded_batch = int(math.ceil(plan.max_batch / shards)) * shards
+        for (op, bucket), n in sorted(per_bucket.items()):
+            flushes = math.ceil(n / plan.max_batch)
+            dev_flush = (padded_batch / shards) * solve_work(op, bucket) \
+                / self.device_work_per_s
+            host_flush = (self.host_s_per_flush
+                          + self.host_s_per_request * plan.max_batch)
+            n_exec += 1
+            device_s += flushes * dev_flush
+            host_s += flushes * host_flush
+            hidden_s += flushes * occupancy * min(host_flush, dev_flush)
+        compile_s = n_exec * self.compile_s_per_executable
+        total_s = max(device_s + host_s - hidden_s + compile_s, 1e-12)
+        requests = max(profile.requests, 1)
+        return {
+            "total_s": total_s,
+            "device_s": device_s,
+            "host_s": host_s,
+            "hidden_s": hidden_s,
+            "compile_s": compile_s,
+            "n_buckets": float(len(per_bucket)),
+            "n_executables": float(n_exec),
+            "est_padding_waste": waste_num / requests,
+            "est_requests_per_s": requests / total_s,
+        }
+
+
+# ---------------------------------------------------------------------------
+# the search driver
+# ---------------------------------------------------------------------------
+
+def server_for_plan(plan: ServingPlan, config: Optional[PCAConfig] = None,
+                    **kw) -> "PCAServer":
+    """A fresh ``PCAServer`` configured exactly as the plan prescribes."""
+    from .engine import PCAServer
+    cfg = dataclasses.replace(config or PCAConfig(),
+                              T=plan.T, S=plan.max_batch)
+    kw.setdefault("max_delay_s", 10.0)
+    return PCAServer(cfg, policy=plan.policy(), max_batch=plan.max_batch,
+                     max_inflight=plan.max_inflight,
+                     executor=plan.build_executor(), **kw)
+
+
+def replay(profile: TrafficProfile, plan: ServingPlan,
+           config: Optional[PCAConfig] = None, seed: int = 0,
+           passes: int = 2) -> Dict[str, float]:
+    """Measure one plan on the profile's regenerated traffic.
+
+    Deterministic end to end: the request sequence and matrix contents
+    depend only on (profile, seed), so every candidate plan sees the
+    byte-identical burst.  One warmup pass compiles the plan's buckets
+    (steady-state serving runs on the executable cache; the cost model
+    charges compilation separately), then best-of-``passes`` timing.
+    """
+    import time as _time
+
+    reqs = request_sequence(profile, seed)
+    rng = np.random.default_rng(seed)
+    mats = [(op, synthesize(op, shape, rng)) for op, shape in reqs]
+    srv = server_for_plan(plan, config)
+
+    def one_pass():
+        tickets = [srv.submit(m, op=op) for op, m in mats]
+        srv.drain()
+        return tickets
+
+    one_pass()                       # warmup: compile every bucket
+    wall, s = float("inf"), None
+    for _ in range(max(passes, 1)):
+        srv.stats.reset()
+        t0 = _time.perf_counter()
+        one_pass()
+        elapsed = _time.perf_counter() - t0
+        if elapsed < wall:
+            # keep the telemetry of the pass whose wall time wins, so a
+            # row's throughput and latency numbers come from the same run
+            wall, s = elapsed, srv.stats.summary()
+    return {
+        "wall_s": wall,
+        "requests_per_s": len(mats) / wall if wall > 0 else 0.0,
+        "latency_p99_ms": s["latency_p99_ms"],
+        "mean_padding_waste": s["mean_padding_waste"],
+        "mean_batch": s["mean_batch"],
+        "cache_hit_rate": s["cache_hit_rate"],
+        "overlap_frac": s["overlap_frac"],
+    }
+
+
+@dataclasses.dataclass
+class AutotuneResult:
+    best: ServingPlan
+    mode: str                                   # "analytic" | "measured"
+    scored: List[Tuple[ServingPlan, Dict]]      # every plan, best first
+    measured: List[Dict] = dataclasses.field(default_factory=list)
+    model: Optional[CostModel] = None
+
+    def to_json(self) -> Dict:
+        return {
+            "mode": self.mode,
+            "best": self.best.to_json(),
+            "best_describe": self.best.describe(),
+            "analytic_top": [
+                {"plan": p.to_json(), "total_s": c["total_s"],
+                 "est_requests_per_s": c["est_requests_per_s"],
+                 "est_padding_waste": c["est_padding_waste"]}
+                for p, c in self.scored[:5]],
+            "measured": self.measured,
+        }
+
+
+def autotune(profile: TrafficProfile,
+             grid: Optional[Sequence[ServingPlan]] = None,
+             model: Optional[CostModel] = None,
+             measure_top_k: int = 0,
+             config: Optional[PCAConfig] = None,
+             seed: int = 0,
+             passes: int = 2) -> AutotuneResult:
+    """Search the plan grid against a profile.
+
+    Exhaustive analytic scoring (the grid is small by design), then an
+    optional measured refinement: the analytic top-``measure_top_k`` plans
+    replay the profile's traffic on live servers and the measured best
+    wins.  ``measure_top_k=0`` is the pure-analytic mode (CI-cheap).
+    """
+    grid = list(grid) if grid is not None else plan_grid()
+    if not grid:
+        raise ValueError("empty plan grid")
+    model = model or CostModel.calibrated(profile)
+    scored = sorted(((plan, model.plan_cost(plan, profile))
+                     for plan in grid), key=lambda pc: pc[1]["total_s"])
+    best, mode, measured = scored[0][0], "analytic", []
+    if measure_top_k > 0:
+        for plan, cost in scored[:measure_top_k]:
+            row = replay(profile, plan, config=config, seed=seed,
+                         passes=passes)
+            row.update(plan=plan.to_json(), describe=plan.describe(),
+                       est_total_s=cost["total_s"])
+            measured.append(row)
+        measured.sort(key=lambda r: -r["requests_per_s"])
+        best, mode = ServingPlan.from_json(measured[0]["plan"]), "measured"
+    return AutotuneResult(best=best, mode=mode, scored=scored,
+                          measured=measured, model=model)

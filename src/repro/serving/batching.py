@@ -18,12 +18,19 @@ Two bucket policies:
     (bucket edges T, 2T, 4T, 8T, ...).  Geometric bucketing: more padding
     waste per request, but O(log) distinct buckets, so mixed traffic
     coalesces into full batches and the executable cache stays tiny.
+
+``pow2_cap`` bounds the geometric growth: bucket edges run T, 2T, 4T, ...
+up to the cap, and any dimension whose power-of-two bucket would overshoot
+it falls back to linear tile rounding.  Geometric padding waste compounds
+with the bucket edge (a dim just past cap/2 pays ~2x area), so capping the
+doubling where traffic is sparse is one of the knobs the serving-plan
+autotuner (``serving.autotune``) searches over.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Sequence, Tuple
+from typing import Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -34,12 +41,21 @@ POLICIES = ("tile", "pow2")
 class BucketPolicy:
     T: int = 16            # tile edge (paper T); bucket dims are multiples
     mode: str = "tile"     # "tile" | "pow2"
+    pow2_cap: Optional[int] = None  # pow2 mode: largest geometric bucket
+                                    # edge; beyond it, linear tile rounding
 
     def __post_init__(self):
         if self.mode not in POLICIES:
             raise ValueError(f"unknown bucket mode {self.mode!r}")
         if self.T < 1:
             raise ValueError("bucket tile size must be >= 1")
+        if self.pow2_cap is not None:
+            if self.mode != "pow2":
+                raise ValueError("pow2_cap only applies to the pow2 mode")
+            if self.pow2_cap < self.T or self.pow2_cap % self.T:
+                raise ValueError(
+                    f"pow2_cap must be a multiple of T={self.T} "
+                    f"(got {self.pow2_cap})")
 
     def bucket_dim(self, n: int) -> int:
         """Smallest bucket edge that holds a dimension of size n."""
@@ -47,7 +63,9 @@ class BucketPolicy:
             raise ValueError("matrix dimensions must be >= 1")
         tiles = math.ceil(n / self.T)
         if self.mode == "pow2":
-            tiles = 1 << (tiles - 1).bit_length()
+            p2 = 1 << (tiles - 1).bit_length()
+            if self.pow2_cap is None or p2 * self.T <= self.pow2_cap:
+                tiles = p2
         return tiles * self.T
 
     def bucket_shape(self, shape: Sequence[int]) -> Tuple[int, ...]:

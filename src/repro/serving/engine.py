@@ -294,13 +294,18 @@ class PCAServer:
         ticket = Ticket(rid, op, matrix.shape, bucket)
         ticket._server = self
         delay = self.max_delay_s if max_delay_s is None else max_delay_s
-        key = (op, bucket)
+        self._enqueue((op, bucket), _Pending(rid, matrix, ticket, now,
+                                             now + delay), now)
+        return ticket
+
+    def _enqueue(self, key: Tuple, entry: "_Pending", now: float) -> None:
+        """Queue one request and flush its bucket when it reaches the cap
+        (shared by ``submit`` and ``apply_plan``'s re-queue)."""
         queue = self._queues.setdefault(key, [])
-        queue.append(_Pending(rid, matrix, ticket, now, now + delay))
+        queue.append(entry)
         self.stats.record_queue_depth(len(queue), now)
         if len(queue) >= self.max_batch:
             self._dispatch_key(key)
-        return ticket
 
     def poll(self, now: Optional[float] = None) -> int:
         """Retire every completed in-flight flush, then dispatch every
@@ -345,6 +350,80 @@ class PCAServer:
         self.drain()
         return [t.result() for t in tickets]
 
+    # -- plan hot-swap ------------------------------------------------------
+    def describe_plan(self) -> Dict:
+        """The serving plan currently in force, as plain JSON-able facts."""
+        return {
+            "mode": self.policy.mode,
+            "T": self.policy.T,
+            "pow2_cap": self.policy.pow2_cap,
+            "max_batch": self.max_batch,
+            "max_inflight": self.max_inflight,
+            "executor": self.executor.describe(),
+        }
+
+    def apply_plan(self, plan) -> Dict:
+        """Atomically switch this server onto a new serving plan.
+
+        ``plan`` is any object with the ``serving.autotune.ServingPlan``
+        surface: ``policy()``, ``build_executor()``, ``max_batch``,
+        ``max_inflight``.  The swap happens *between* flushes:
+
+          1. every in-flight flush is retired first (its tickets are
+             fulfilled under the old plan -- they already rode old-plan
+             slabs, so retiring them is the only exact choice);
+          2. still-queued requests are re-bucketed under the new policy in
+             submission order -- their tickets survive the swap untouched
+             (same rid, same deadline), only their bucket assignment moves;
+          3. policy / batch cap / pipeline depth / executor switch, and
+             re-bucketed queues dispatch whenever they reach the new batch
+             cap, mirroring ``submit``'s flush-on-full (so a merged queue
+             that now holds several caps' worth flushes in cap-sized
+             microbatches, not one oversized slab).
+
+        ``config.T``/``config.S`` are realigned to the plan's tile and
+        flush size (exactly what ``autotune.server_for_plan`` builds for a
+        cold start), so a hot-swapped server and a cold server on the same
+        plan compile identical executables -- including the matmul block
+        size when ``config.backend`` routes through the MM-Engine -- and
+        serve bit-identical results.  The executable cache is keyed on
+        (op, bucket, batch, config, executor), none of which mention the
+        policy, so buckets both plans agree on keep their compiled
+        executables across a swap that preserves T and S.  Returns the
+        switch record also appended to ``stats.plan_switches``.
+        """
+        if plan.max_inflight < 1:
+            raise ValueError(
+                f"plan.max_inflight must be >= 1, got {plan.max_inflight}")
+        if plan.max_batch < 1:
+            raise ValueError(
+                f"plan.max_batch must be >= 1, got {plan.max_batch}")
+        # materialize the plan's policy and executor *before* touching any
+        # server state: a plan that fails here (bad pow2_cap, bogus mesh
+        # spec) must leave the server -- and every queued ticket -- intact
+        new_policy = plan.policy()
+        new_executor = plan.build_executor()
+        old_plan = self.describe_plan()
+        self._inflight.retire_to_depth(0)
+        queued = sorted((e for q in self._queues.values() for e in q),
+                        key=lambda e: e.rid)
+        self._queues = {}
+        self.policy = new_policy
+        self.max_batch = plan.max_batch
+        self.max_inflight = plan.max_inflight
+        self.executor = new_executor
+        self.config = dataclasses.replace(self.config, T=self.policy.T,
+                                          S=self.max_batch)
+        switch = {"from": old_plan, "to": self.describe_plan(),
+                  "requeued": len(queued)}
+        now = self.clock()
+        self.stats.record_plan_switch(switch, now=now)
+        for e in queued:
+            bucket = self.policy.bucket_shape(e.matrix.shape)
+            e.ticket.bucket = bucket
+            self._enqueue((e.ticket.op, bucket), e, now)
+        return switch
+
     # -- dispatch stage -----------------------------------------------------
     def _dispatch_key(self, key: Tuple) -> int:
         """Stack, pad, compile, launch one bucket queue -- non-blocking.
@@ -383,6 +462,7 @@ class PCAServer:
         flush.t_launched = self.clock()
         flush.backend = backend
         flush.batch_size = b
+        flush.padded_batch = bp
         flush.cache_hit = hit
         flush._retire_cb = self._retire
         self._inflight.push(flush)
@@ -418,7 +498,8 @@ class PCAServer:
             flush.cache_hit, t_dispatch=flush.t_dispatch,
             t_launched=flush.t_launched, t_wait=t_wait, t_retire=t_retire,
             batch_size=flush.batch_size,
-            inflight_depth=flush.inflight_depth)
+            inflight_depth=flush.inflight_depth,
+            op=op, bucket=bucket, padded_batch=flush.padded_batch)
         for i, e in enumerate(flush.entries):
             rec = RequestRecord(
                 rid=e.rid, op=op, shape=e.matrix.shape, bucket=bucket,

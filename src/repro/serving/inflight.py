@@ -55,8 +55,9 @@ class InFlightFlush:
     """
 
     __slots__ = ("seq", "key", "entries", "t_dispatch", "t_launched",
-                 "backend", "batch_size", "cache_hit", "inflight_depth",
-                 "n_shards", "retired", "_out", "_host", "_retire_cb")
+                 "backend", "batch_size", "padded_batch", "cache_hit",
+                 "inflight_depth", "n_shards", "retired", "_out", "_host",
+                 "_retire_cb")
 
     def __init__(self, out, n_shards: int = 1):
         self._out = out            # device result tree (async futures)
@@ -71,6 +72,7 @@ class InFlightFlush:
         self.t_launched = 0.0      # executor.submit returned (host free)
         self.backend: Optional[str] = None
         self.batch_size = 0
+        self.padded_batch = 0      # device batch after padding/rounding
         self.cache_hit = False
         self.inflight_depth = 1
         self._retire_cb: Optional[Callable] = None

@@ -71,6 +71,11 @@ class FlushRecord:
     batch_size: int
     cache_hit: bool
     inflight_depth: int        # outstanding flushes right after dispatch
+    op: str = ""               # which solver the flush ran
+    bucket: Tuple[int, ...] = ()   # the flush's shape bucket
+    padded_batch: int = 0      # device batch after padding/rounding (the
+                               # slab the executable actually consumed;
+                               # padded_batch - batch_size is inert filler)
 
     @property
     def dispatch_s(self) -> float:
@@ -110,6 +115,8 @@ class ServingStats:
             maxlen=max_records)
         self.flush_records: Deque[FlushRecord] = collections.deque(
             maxlen=max_records)
+        self.plan_switches: Deque[Dict] = collections.deque(
+            maxlen=max_records)
         self.flushes = 0
         self.cache_hits = 0
         self.cache_misses = 0
@@ -133,7 +140,10 @@ class ServingStats:
                      t_wait: Optional[float] = None,
                      t_retire: Optional[float] = None,
                      batch_size: int = 0,
-                     inflight_depth: int = 1) -> None:
+                     inflight_depth: int = 1,
+                     op: str = "",
+                     bucket: Tuple[int, ...] = (),
+                     padded_batch: int = 0) -> None:
         self.flushes += 1
         if cache_hit:
             self.cache_hits += 1
@@ -146,17 +156,32 @@ class ServingStats:
                 t_wait=t_dispatch if t_wait is None else t_wait,
                 t_retire=t_dispatch if t_retire is None else t_retire,
                 batch_size=batch_size, cache_hit=cache_hit,
-                inflight_depth=inflight_depth))
+                inflight_depth=inflight_depth, op=op, bucket=tuple(bucket),
+                padded_batch=padded_batch))
+
+    def record_plan_switch(self, switch: Dict,
+                           now: Optional[float] = None) -> None:
+        """One ``PCAServer.apply_plan`` hot-swap (old plan, new plan,
+        how many queued requests were re-bucketed)."""
+        self.plan_switches.append(
+            {"t": self.clock() if now is None else now, **switch})
 
     def reset(self) -> None:
         self.records.clear()
         self.queue_depths.clear()
         self.inflight_depths.clear()
         self.flush_records.clear()
+        self.plan_switches.clear()
         self.flushes = self.cache_hits = self.cache_misses = 0
 
     # -- summaries ----------------------------------------------------------
     def summary(self) -> Dict[str, float]:
+        # empty percentiles are 0.0, not NaN: profile capture on an idle
+        # server (serving.autotune) must produce a well-defined, JSON-clean
+        # summary, and NaN would poison every downstream aggregate
+        def pct(xs, p):
+            return percentile(xs, p) if len(xs) else 0.0
+
         lat = [r.latency_s for r in self.records]
         if self.records:
             span = (max(r.t_done for r in self.records)
@@ -176,9 +201,9 @@ class ServingStats:
             "requests": len(self.records),
             "wall_s": span,
             "requests_per_s": len(self.records) / span if span > 0 else 0.0,
-            "latency_p50_ms": percentile(lat, 50) * 1e3,
-            "latency_p99_ms": percentile(lat, 99) * 1e3,
-            "queue_p50_ms": percentile(
+            "latency_p50_ms": pct(lat, 50) * 1e3,
+            "latency_p99_ms": pct(lat, 99) * 1e3,
+            "queue_p50_ms": pct(
                 [r.queue_s for r in self.records], 50) * 1e3,
             "mean_batch": (float(np.mean([r.batch_size for r in self.records]))
                            if self.records else 0.0),
@@ -198,6 +223,7 @@ class ServingStats:
             "max_inflight_depth": max(inflight) if inflight else 0,
             "overlap_frac": (overlap_s / span_s if span_s > 0 else 0.0),
             "overlap_s": overlap_s,
+            "plan_switches": len(self.plan_switches),
         }
 
     # -- fabric-model hooks -------------------------------------------------

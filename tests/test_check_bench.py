@@ -124,3 +124,41 @@ def test_metric_must_be_shared_by_both_sides():
                    "us_per_call": 90.0}])
     lines, ok = check_bench.compare_docs("x.json", base, fresh, tol=0.25)
     assert ok and any("us_per_call" in ln for ln in lines)
+
+
+# ---------------------------------------------------------------------------
+# the intra-file autotune gate (BENCH_autotune_gain.json)
+# ---------------------------------------------------------------------------
+
+def _autotune_doc(default_rps, tuned):
+    rows = [{"plan": "default", "T": 16, "requests_per_s": default_rps}]
+    rows += [{"plan": label, "T": 16, "requests_per_s": rps}
+             for label, rps in tuned]
+    return _doc(rows)
+
+
+def test_autotune_gate_tuned_above_default_passes():
+    doc = _autotune_doc(100.0, [("analytic", 140.0), ("measured", 150.0)])
+    lines, ok = check_bench.autotune_gate("a.json", doc, tol=0.25)
+    assert ok and sum("ok" in ln for ln in lines) == 2
+
+
+def test_autotune_gate_tuned_within_tolerance_passes():
+    """Tuned may sit slightly below default (measurement noise) as long as
+    it stays within the tolerance band."""
+    doc = _autotune_doc(100.0, [("measured", 80.0)])
+    lines, ok = check_bench.autotune_gate("a.json", doc, tol=0.25)
+    assert ok
+
+
+def test_autotune_gate_tuned_losing_to_default_fails():
+    doc = _autotune_doc(100.0, [("analytic", 130.0), ("measured", 60.0)])
+    lines, ok = check_bench.autotune_gate("a.json", doc, tol=0.25)
+    assert not ok
+    assert any("BELOW-DEFAULT" in ln and "measured" in ln for ln in lines)
+
+
+def test_autotune_gate_without_default_row_skips():
+    doc = _doc([{"plan": "measured", "T": 16, "requests_per_s": 10.0}])
+    lines, ok = check_bench.autotune_gate("a.json", doc, tol=0.25)
+    assert ok and any("skipped" in ln for ln in lines)
