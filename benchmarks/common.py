@@ -2,8 +2,10 @@
 (Table IV), CSV emission, machine-readable JSON trajectory files."""
 from __future__ import annotations
 
+import datetime
 import json
 import pathlib
+import subprocess
 import time
 from typing import Callable, Dict, Tuple
 
@@ -62,11 +64,36 @@ def emit(name: str, us_per_call, derived=""):
     print(f"{name},{us_per_call},{derived}", flush=True)
 
 
+def provenance() -> Dict:
+    """Where/when/what produced a benchmark number: git SHA, timestamp,
+    jax version, device backend and count.  Best-effort (a checkout-less
+    run stamps ``git_sha: null``) -- the numbers must still emit."""
+    try:
+        r = subprocess.run(["git", "rev-parse", "HEAD"], cwd=REPO_ROOT,
+                           capture_output=True, text=True, timeout=10)
+        sha = r.stdout.strip() if r.returncode == 0 else None
+    except OSError:
+        sha = None
+    return {
+        "git_sha": sha,
+        "emitted_at": datetime.datetime.now(
+            datetime.timezone.utc).isoformat(timespec="seconds"),
+        "jax_version": jax.__version__,
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+    }
+
+
 def emit_json(name: str, payload: Dict) -> pathlib.Path:
     """Write a machine-readable result file ``BENCH_<name>.json`` at the
     repo root so the perf trajectory accumulates across PRs.  ``payload``
-    should be a dict of plain scalars/lists (rows keyed like the CSV)."""
+    should be a dict of plain scalars/lists (rows keyed like the CSV).
+
+    Every file carries a ``provenance`` block (git SHA, emission time, jax
+    version, device fleet); ``scripts/check_bench.py`` ignores it when
+    diffing rows, so provenance churn never reads as a perf change."""
     path = REPO_ROOT / f"BENCH_{name}.json"
-    doc = {"benchmark": name, "timestamp_s": time.time(), **payload}
+    doc = {"benchmark": name, "timestamp_s": time.time(),
+           "provenance": provenance(), **payload}
     path.write_text(json.dumps(doc, indent=2, sort_keys=True) + "\n")
     return path

@@ -81,8 +81,15 @@ def row_metric(row: dict, also_in: dict = None):
 
 
 def iter_rows(doc: dict):
-    """Every (section, row) of a BENCH doc: any top-level list of dicts."""
+    """Every (section, row) of a BENCH doc: any top-level list of dicts.
+
+    The ``provenance`` metadata block (git SHA, emission time, jax
+    version -- see ``benchmarks/common.emit_json``) is explicitly not a
+    row source: it describes the run, not a measurement, and must never
+    enter the regression diff."""
     for section, val in sorted(doc.items()):
+        if section == "provenance":
+            continue
         if isinstance(val, list) and all(isinstance(r, dict) for r in val):
             for row in val:
                 yield section, row

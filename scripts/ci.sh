@@ -15,10 +15,14 @@
 #      burst, in-flight depth telemetry > 1); runs in both matrix jobs
 #   3. backend-sweep smoke  -- one sweep point: a router splits two buckets
 #      across two kernel backends in one server, verified against numpy
-#   4. perf-regression gate -- re-emit BENCH_serve_throughput.json and diff
+#   4. observability smoke  -- a traced serve_pca run must export a
+#      schema-valid Chrome trace (request->flush parentage checked by
+#      repro.obs.validate_trace) and Prometheus metrics carrying the
+#      per-(op, bucket, backend) latency histograms and SLO counters
+#   5. perf-regression gate -- re-emit BENCH_serve_throughput.json and diff
 #      it against the committed copy (scripts/check_bench.py; fails on
 #      >25% throughput regression).  Runs regardless of --slow.
-#   5. tier-1 tests         -- fast tier by default (pytest.ini deselects
+#   6. tier-1 tests         -- fast tier by default (pytest.ini deselects
 #      `slow`); MUST be zero failures, enforced by the pytest exit code
 #      under `set -e`.  `scripts/ci.sh --slow` appends the slow tier.
 set -euo pipefail
@@ -49,6 +53,35 @@ python -m repro.launch.serve_pca --selftest
 
 echo "== backend-sweep smoke (serve_throughput --selftest) =="
 python -m benchmarks.serve_throughput --selftest
+
+echo "== observability smoke (traced serve_pca + trace schema gate) =="
+OBS_DIR="${OBS_DIR:-$(mktemp -d)}"
+python -m repro.launch.serve_pca --requests 16 --slo-ms 50 \
+    --trace-out "$OBS_DIR/trace.json" \
+    --metrics-out "$OBS_DIR/metrics.prom" > "$OBS_DIR/serve_pca.json"
+python - "$OBS_DIR" <<'EOF'
+import json, pathlib, sys
+from repro.obs import validate_trace
+obs_dir = pathlib.Path(sys.argv[1])
+doc = json.loads((obs_dir / "trace.json").read_text())
+errors = validate_trace(doc)
+assert not errors, errors[:5]
+xs = {e["id"]: e for e in doc["traceEvents"]
+      if e.get("ph") == "X" and isinstance(e.get("id"), int)}
+requests = [e for e in xs.values() if e["name"].startswith("request:")]
+assert requests, "no request spans in trace"
+for e in requests:
+    assert xs[e["args"]["parent"]]["name"].startswith("flush:")
+prom = (obs_dir / "metrics.prom").read_text()
+for want in ("serve_request_latency_seconds_bucket", "serve_flushes_total",
+             "slo_requests_total"):
+    assert want in prom, f"{want} missing from metrics export"
+slo = json.loads((obs_dir / "serve_pca.json").read_text())["obs"]["slo"]
+assert slo["requests"] == 16, slo
+print(f"observability smoke ok: {len(xs)} spans, "
+      f"{len(requests)} request spans, "
+      f"goodput {slo['goodput_rps']:.1f} rps @ {slo['slo_ms']:.0f}ms SLO")
+EOF
 
 echo "== perf-regression gate (serve_throughput + check_bench) =="
 # single-device regime only: grid rows from a multi-device process carry a

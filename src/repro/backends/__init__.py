@@ -8,10 +8,11 @@ escape hatch.  See ``repro.kernels.ops`` for the registered ops and
 """
 from .registry import (BACKENDS, ENV_VAR, available, backends_for,
                        default_backend, describe, register, registered_ops,
-                       resolve, set_default_backend, use_backend)
+                       reset_resolution_counts, resolution_counts, resolve,
+                       set_default_backend, use_backend)
 
 __all__ = [
     "BACKENDS", "ENV_VAR", "available", "backends_for", "default_backend",
-    "describe", "register", "registered_ops", "resolve",
-    "set_default_backend", "use_backend",
+    "describe", "register", "registered_ops", "reset_resolution_counts",
+    "resolution_counts", "resolve", "set_default_backend", "use_backend",
 ]

@@ -23,6 +23,7 @@ heuristic in ``repro.kernels.ops`` with one inspectable policy point.
 """
 from __future__ import annotations
 
+import collections
 import contextlib
 import os
 import threading
@@ -35,6 +36,12 @@ ENV_VAR = "REPRO_KERNEL_BACKEND"
 _REGISTRY: Dict[str, Dict[str, Callable]] = {}
 _STATE = threading.local()
 _PROCESS_DEFAULT: Optional[str] = None
+
+# per-(op, backend) resolution counts -- which implementation every kernel
+# call actually landed on.  A plain Counter increment (~100ns) so it can
+# sit inside resolve() unconditionally; repro.obs mirrors it into the
+# metric registry at export time (``kernel_backend_resolutions_total``).
+_RESOLUTIONS: "collections.Counter[Tuple[str, str]]" = collections.Counter()
 
 
 def _check_backend(name: str) -> str:
@@ -133,7 +140,18 @@ def resolve(op: str, backend: Optional[str] = None) -> Callable:
         raise KeyError(
             f"op {op!r} has no {name!r} backend; available: "
             f"{backends_for(op)}")
+    _RESOLUTIONS[(op, name)] += 1
     return impls[name]
+
+
+def resolution_counts() -> Dict[Tuple[str, str], int]:
+    """Lifetime (op, backend) -> resolve() count; the observability layer
+    exports this as ``kernel_backend_resolutions_total``."""
+    return dict(_RESOLUTIONS)
+
+
+def reset_resolution_counts() -> None:
+    _RESOLUTIONS.clear()
 
 
 def describe() -> str:

@@ -26,6 +26,13 @@ hot-swap the winner onto the live server before the timed pass):
   PYTHONPATH=src python -m repro.launch.serve_pca --autotune measured \
       --profile-in /tmp/traffic.json
 
+Observability (span trace of the timed pass -- load in chrome://tracing or
+https://ui.perfetto.dev -- plus Prometheus metrics and goodput under an
+SLO; ``--jax-profile DIR`` additionally captures a jax.profiler device
+trace):
+  PYTHONPATH=src python -m repro.launch.serve_pca --slo-ms 50 \
+      --trace-out /tmp/trace.json --metrics-out /tmp/metrics.prom
+
 CI smoke (exercises submit/flush/cache + checks results against numpy;
 includes a sharded-flush parity leg over every visible device, an
 async-pipeline leg -- a mixed burst must match the synchronous engine
@@ -46,6 +53,7 @@ import numpy as np
 
 from repro.core import PCAConfig
 from repro.core.memory_model import VIRTEX_US
+from repro.obs import Observability, device_profile, validate_trace
 from repro.serving import (BucketPolicy, PCAServer, POLICIES, TrafficProfile,
                            autotune, mesh_executor, plan_grid,
                            server_for_plan)
@@ -164,6 +172,42 @@ def selftest() -> int:
     assert len(hot.stats.plan_switches) == 1, hot.stats.plan_switches
     assert hot.stats.summary()["plan_switches"] == 1
 
+    # observability leg: the same mixed burst through a fully traced
+    # server must be *bitwise identical* to the untraced one (tracing
+    # samples clocks and appends to rings -- it must never touch the
+    # math), the exported trace must pass the Chrome-schema validator
+    # with every request span parented to a flush span, and the metric
+    # export must carry the per-(op, bucket, backend) latency series
+    obs = Observability.enabled(slo_ms=1000.0)
+    traced = PCAServer(PCAConfig(T=8, S=4, sweeps=14),
+                       policy=BucketPolicy(T=8), max_delay_s=10.0,
+                       obs=obs, clock=obs.clock, max_inflight=2)
+    for op, traffic in (("eigh", mats), ("svd", svd_in)):
+        got = traced.solve_many(traffic, op=op)
+        want = srv.solve_many(traffic, op=op)
+        for g, w in zip(got, want):
+            for field in (f.name for f in dataclasses.fields(g)):
+                np.testing.assert_array_equal(
+                    np.asarray(getattr(g, field)),
+                    np.asarray(getattr(w, field)),
+                    err_msg=f"traced-vs-untraced {op}.{field}")
+    trace = obs.trace_doc()
+    errors = validate_trace(trace)
+    assert not errors, errors
+    by_id = {e["id"]: e for e in trace["traceEvents"]
+             if e.get("ph") == "X" and isinstance(e.get("id"), int)}
+    requests = [e for e in trace["traceEvents"]
+                if e.get("ph") == "X" and e["name"].startswith("request:")]
+    assert len(requests) == len(mats) + len(svd_in), len(requests)
+    for e in requests:
+        parent = by_id[e["args"]["parent"]]
+        assert parent["name"].startswith("flush:"), parent["name"]
+    prom = obs.prometheus_text()
+    assert "serve_request_latency_seconds_bucket" in prom, prom[:400]
+    assert 'op="eigh"' in prom and 'op="svd"' in prom
+    slo = obs.summary()["slo"]
+    assert slo["requests"] == len(mats) + len(svd_in), slo
+
     print("serve_pca selftest ok:",
           json.dumps({k: round(v, 4) for k, v in summary.items()}))
     print("serve_pca sharded selftest ok:", json.dumps({
@@ -175,6 +219,11 @@ def selftest() -> int:
         "tuned_plan": tuned.describe(),
         "profile_requests": profile.requests,
         "hot_swap_requeued": hot.stats.plan_switches[0]["requeued"]}))
+    print("serve_pca obs selftest ok:", json.dumps({
+        "spans": len(obs.tracer),
+        "trace_events": len(trace["traceEvents"]),
+        "request_spans": len(requests),
+        "goodput_rps": round(slo["goodput_rps"], 2)}))
     return 0
 
 
@@ -226,6 +275,22 @@ def main(argv=None) -> int:
     ap.add_argument("--profile-out", default=None,
                     help="write the captured traffic profile JSON here "
                          "(capture once, replay in CI)")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Chrome trace-event JSON of the timed "
+                         "pass here (load in chrome://tracing or "
+                         "https://ui.perfetto.dev); implies tracing on")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the Prometheus text exposition of the "
+                         "serving metrics here; implies metrics on")
+    ap.add_argument("--slo-ms", type=float, default=None,
+                    help="latency SLO target: report goodput (requests/s "
+                         "served within the target) and miss counts next "
+                         "to raw throughput; implies observability on")
+    ap.add_argument("--jax-profile", default=None,
+                    help="directory for a jax.profiler device trace "
+                         "around the timed pass (TensorBoard/"
+                         "Perfetto-loadable); no-op if the jax build "
+                         "lacks profiler support")
     ap.add_argument("--selftest", action="store_true",
                     help="run the 2-second smoke and exit")
     args = ap.parse_args(argv)
@@ -236,12 +301,17 @@ def main(argv=None) -> int:
     dims = [int(d) for d in args.dims.split(",")]
     config = PCAConfig(T=args.tile, S=args.max_batch, sweeps=args.sweeps)
     executor = mesh_executor(args.mesh)
+    want_obs = (args.trace_out or args.metrics_out
+                or args.slo_ms is not None or args.jax_profile)
+    obs = Observability.enabled(slo_ms=args.slo_ms) if want_obs else None
     srv = PCAServer(config, policy=BucketPolicy(T=args.tile,
                                                 mode=args.bucket_policy),
                     max_batch=args.max_batch,
                     max_delay_s=args.timeout_ms / 1e3,
                     executor=executor,
-                    max_inflight=args.inflight)
+                    max_inflight=args.inflight,
+                    obs=obs,
+                    **({"clock": obs.clock} if obs is not None else {}))
     mats = mixed_traffic(args.requests, args.op, dims, args.seed)
     srv.solve_many(mats, op=args.op)       # warmup: compile the buckets
     # the warmup pass doubles as the profiling pass: its telemetry is the
@@ -265,15 +335,29 @@ def main(argv=None) -> int:
             profile, grid=plan_grid(meshes=meshes), config=config,
             measure_top_k=(args.measure_top_k
                            if args.autotune == "measured" else 0),
-            seed=args.seed)
+            seed=args.seed, obs=obs)
         srv.apply_plan(result.best)
         srv.solve_many(mats, op=args.op)   # re-warmup under the tuned plan
         tune_info = result.to_json()
     srv.stats.reset()
-    srv.solve_many(mats, op=args.op)
+    if obs is not None:
+        # the exported trace/metrics cover the timed pass only, not the
+        # warmup/profiling passes (steady-state is what the artifacts mean)
+        obs.tracer.clear()
+        if obs.slo is not None:
+            obs.slo.reset()
+    with device_profile(args.jax_profile):
+        srv.solve_many(mats, op=args.op)
     summary = srv.stats.summary()
     pvm = srv.stats.predicted_vs_measured(VIRTEX_US)
     ratios = [r["ratio"] for r in pvm if np.isfinite(r["ratio"])]
+    obs_info = None
+    if obs is not None:
+        obs_info = obs.summary()
+        if args.trace_out:
+            obs_info["trace_out"] = str(obs.save_trace(args.trace_out))
+        if args.metrics_out:
+            obs_info["metrics_out"] = str(obs.save_metrics(args.metrics_out))
     print(json.dumps({
         "op": args.op,
         "config": {"T": args.tile, "S": args.max_batch,
@@ -283,6 +367,7 @@ def main(argv=None) -> int:
                    "max_inflight": args.inflight},
         "plan": srv.describe_plan(),
         "autotune": tune_info,
+        "obs": obs_info,
         "summary": summary,
         "fabric_model": {
             "reference": "MANOJAVAM(16,32)@Virtex-US+",

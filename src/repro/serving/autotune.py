@@ -507,17 +507,23 @@ def autotune(profile: TrafficProfile,
              measure_top_k: int = 0,
              config: Optional[PCAConfig] = None,
              seed: int = 0,
-             passes: int = 2) -> AutotuneResult:
+             passes: int = 2,
+             obs=None) -> AutotuneResult:
     """Search the plan grid against a profile.
 
     Exhaustive analytic scoring (the grid is small by design), then an
     optional measured refinement: the analytic top-``measure_top_k`` plans
     replay the profile's traffic on live servers and the measured best
     wins.  ``measure_top_k=0`` is the pure-analytic mode (CI-cheap).
+
+    ``obs``: optional ``repro.obs.Observability`` -- the search lands as
+    one span on the control track plus an ``autotune_searches_total{mode}``
+    counter, so plan churn shows up next to the plan-swap spans it causes.
     """
     grid = list(grid) if grid is not None else plan_grid()
     if not grid:
         raise ValueError("empty plan grid")
+    t0 = obs.clock() if obs is not None else 0.0
     model = model or CostModel.calibrated(profile)
     scored = sorted(((plan, model.plan_cost(plan, profile))
                      for plan in grid), key=lambda pc: pc[1]["total_s"])
@@ -531,5 +537,13 @@ def autotune(profile: TrafficProfile,
             measured.append(row)
         measured.sort(key=lambda r: -r["requests_per_s"])
         best, mode = ServingPlan.from_json(measured[0]["plan"]), "measured"
+    if obs is not None:
+        obs.tracer.complete(
+            "autotune", ts=t0, end=obs.clock(), cat="control",
+            track="control", mode=mode, plans=len(grid),
+            measured=len(measured), best=best.describe())
+        obs.metrics.counter(
+            "autotune_searches_total", "Serving-plan autotune searches.",
+            ("mode",)).labels(mode=mode).inc()
     return AutotuneResult(best=best, mode=mode, scored=scored,
                           measured=measured, model=model)

@@ -245,6 +245,15 @@ class PCAServer:
         overlapping host-side stacking/padding/unpacking with device
         execution; dispatching beyond the cap back-pressures by retiring
         the oldest flush first.
+      obs: optional ``repro.obs.Observability`` bundle.  When given, every
+        pipeline stage emits spans (request submit->fulfil, flush
+        dispatch/inflight/wait/retire with compile children on cache
+        misses, plan swaps) into its tracer and per-(op, bucket, backend,
+        executor) counters/histograms into its metric registry, and each
+        fulfilled request is SLO-accounted.  ``None`` (the default) is the
+        uninstrumented fast path: one attribute check per stage, measured
+        within 3% of bare throughput.  Give the bundle the same ``clock``
+        as the server so spans line up with telemetry.
       clock: injectable monotonic clock (tests drive deadlines manually).
     """
 
@@ -258,6 +267,7 @@ class PCAServer:
         backend_router: Optional[BackendRouter] = None,
         executor: Optional[LocalExecutor] = None,
         max_inflight: int = 1,
+        obs=None,
         clock: Callable[[], float] = time.monotonic,
     ):
         if max_inflight < 1:
@@ -270,6 +280,7 @@ class PCAServer:
         self.backend_router = backend_router
         self.executor = executor or LocalExecutor()
         self.max_inflight = max_inflight
+        self.obs = obs
         self.clock = clock
         self.stats = ServingStats(clock=clock)
         self._queues: Dict[Tuple, List[_Pending]] = {}
@@ -277,6 +288,46 @@ class PCAServer:
         self._cache: Dict[Tuple, Callable] = {}
         self._rid = itertools.count()
         self._seq = itertools.count()
+        self._exec_label = self.executor.describe()
+        if obs is not None:
+            self._wire_obs()
+
+    def _wire_obs(self) -> None:
+        """Create the engine's metric families once (per-call recording is
+        then a dict lookup) and hand the executor the bundle so launches
+        are traced where they happen."""
+        m = self.obs.metrics
+        self._m_submitted = m.counter(
+            "serve_requests_total", "Requests accepted by submit().",
+            ("op",))
+        self._m_flushes = m.counter(
+            "serve_flushes_total", "Microbatch flushes dispatched.",
+            ("op", "bucket", "backend", "executor", "cache"))
+        self._m_latency = m.histogram(
+            "serve_request_latency_seconds",
+            "Submit-to-fulfil latency per request.",
+            ("op", "bucket", "backend", "executor"))
+        self._m_queue = m.histogram(
+            "serve_queue_seconds",
+            "Submit-to-dispatch wait per request.",
+            ("op", "bucket", "backend", "executor"))
+        self._m_wait = m.histogram(
+            "serve_flush_wait_seconds",
+            "Blocked-on-device time per retired flush.",
+            ("op", "bucket", "backend", "executor"))
+        self._m_batch = m.histogram(
+            "serve_flush_batch_size", "Live requests per flush.",
+            ("op", "bucket"), buckets=(1, 2, 4, 8, 16, 32, 64, 128))
+        self._m_depth = m.gauge(
+            "serve_inflight_depth",
+            "In-flight flushes after a dispatch.").labels()
+        self._m_queued = m.gauge(
+            "serve_queued_requests",
+            "Requests queued, not yet dispatched.").labels()
+        self._m_swaps = m.counter(
+            "serve_plan_swaps_total", "apply_plan hot-swaps.").labels()
+        if getattr(self.executor, "obs", None) is None:
+            self.executor.obs = self.obs
 
     # -- request path -------------------------------------------------------
     def submit(self, matrix, op: str = "eigh",
@@ -294,6 +345,8 @@ class PCAServer:
         ticket = Ticket(rid, op, matrix.shape, bucket)
         ticket._server = self
         delay = self.max_delay_s if max_delay_s is None else max_delay_s
+        if self.obs is not None:
+            self._m_submitted.labels(op=op).inc(now=now)
         self._enqueue((op, bucket), _Pending(rid, matrix, ticket, now,
                                              now + delay), now)
         return ticket
@@ -304,6 +357,8 @@ class PCAServer:
         queue = self._queues.setdefault(key, [])
         queue.append(entry)
         self.stats.record_queue_depth(len(queue), now)
+        if self.obs is not None:
+            self._m_queued.set(self.pending(), now=now)
         if len(queue) >= self.max_batch:
             self._dispatch_key(key)
 
@@ -401,6 +456,7 @@ class PCAServer:
         # materialize the plan's policy and executor *before* touching any
         # server state: a plan that fails here (bad pow2_cap, bogus mesh
         # spec) must leave the server -- and every queued ticket -- intact
+        t_swap = self.clock()
         new_policy = plan.policy()
         new_executor = plan.build_executor()
         old_plan = self.describe_plan()
@@ -414,10 +470,20 @@ class PCAServer:
         self.executor = new_executor
         self.config = dataclasses.replace(self.config, T=self.policy.T,
                                           S=self.max_batch)
+        self._exec_label = self.executor.describe()
         switch = {"from": old_plan, "to": self.describe_plan(),
                   "requeued": len(queued)}
         now = self.clock()
         self.stats.record_plan_switch(switch, now=now)
+        if self.obs is not None:
+            if getattr(self.executor, "obs", None) is None:
+                self.executor.obs = self.obs
+            self._m_swaps.inc(now=now)
+            self.obs.tracer.complete(
+                "plan_swap", ts=t_swap, end=now, cat="control",
+                track="control", requeued=len(queued),
+                executor=self._exec_label, max_batch=self.max_batch,
+                max_inflight=self.max_inflight, T=self.policy.T)
         for e in queued:
             bucket = self.policy.bucket_shape(e.matrix.shape)
             e.ticket.bucket = bucket
@@ -453,7 +519,24 @@ class PCAServer:
                 [n_active, np.zeros((n_active.shape[0], bp - b), np.int32)],
                 axis=1)
         backend = self.backend_for(op, bucket)
-        fn, hit = self._executable(op, bucket, bp, backend)
+        obs = self.obs
+        if obs is not None:
+            # reserve the flush span's id now so the compile/launch spans
+            # recorded below can name it as their parent; the span itself
+            # is recorded at retire time, when its end is known
+            flush_span = obs.tracer.new_id()
+            t0 = self.clock()
+            fn, hit = self._executable(op, bucket, bp, backend)
+            if not hit:
+                # the executable *build* (solver closure + jit wrapper);
+                # XLA compilation itself runs lazily inside this flush's
+                # first launch, so its cost lands in the dispatch span
+                obs.tracer.complete(
+                    "compile", ts=t0, end=self.clock(), cat="compile",
+                    track="flushes", parent=flush_span, op=op,
+                    bucket=list(bucket), batch=bp, backend=str(backend))
+        else:
+            fn, hit = self._executable(op, bucket, bp, backend)
         flush = self.executor.submit(fn, batch, n_active)
         flush.seq = next(self._seq)
         flush.key = key
@@ -470,6 +553,14 @@ class PCAServer:
         for e in queue:
             e.ticket._flush = flush
         self.stats.record_dispatch(self._inflight.depth, t_dispatch)
+        if obs is not None:
+            flush.span_id = flush_span
+            self._m_flushes.labels(
+                op, bucket, backend, self._exec_label,
+                "hit" if hit else "miss").inc(now=t_dispatch)
+            self._m_batch.labels(op, bucket).observe(b, now=t_dispatch)
+            self._m_depth.set(self._inflight.depth, now=t_dispatch)
+            self._m_queued.set(self.pending(), now=t_dispatch)
         # back-pressure: block on the oldest flush until the cap holds.
         # Deliberately *not* an opportunistic ready-sweep -- retirement
         # points stay deterministic (cap, poll, drain, ticket) no matter
@@ -500,6 +591,7 @@ class PCAServer:
             batch_size=flush.batch_size,
             inflight_depth=flush.inflight_depth,
             op=op, bucket=bucket, padded_batch=flush.padded_batch)
+        records = []
         for i, e in enumerate(flush.entries):
             rec = RequestRecord(
                 rid=e.rid, op=op, shape=e.matrix.shape, bucket=bucket,
@@ -509,10 +601,65 @@ class PCAServer:
                 padding_waste=padding_waste(e.matrix.shape, bucket),
                 backend=flush.backend, n_shards=flush.n_shards,
                 t_dispatch=flush.t_dispatch,
-                inflight_depth=flush.inflight_depth)
+                inflight_depth=flush.inflight_depth,
+                deadline=e.flush_by)
             e.ticket._fulfil(self._unpack(op, out, i, e.matrix.shape), rec)
             self.stats.record_request(rec)
+            records.append(rec)
+        if self.obs is not None:
+            self._record_obs(flush, records, t_wait, t_retire)
         return len(flush.entries)
+
+    def _record_obs(self, flush: InFlightFlush, records: List[RequestRecord],
+                    t_wait: float, t_retire: float) -> None:
+        """Emit the retired flush's spans and metrics (obs attached only).
+
+        One flush span (dispatch -> retire-complete) with dispatch /
+        inflight / wait / retire children, then one request span per
+        fulfilled ticket, parented to the flush span -- the link that ties
+        a request's latency to the microbatch that actually served it.
+        """
+        obs = self.obs
+        tr = obs.tracer
+        op, bucket = flush.key
+        backend, exec_label = flush.backend, self._exec_label
+        t_end = self.clock()
+        fid = flush.span_id if flush.span_id is not None else tr.new_id()
+        bucket_l = list(bucket)
+        tr.complete(
+            f"flush:{op}", ts=flush.t_dispatch, end=t_end, cat="flush",
+            track="flushes", id=fid, op=op, bucket=bucket_l,
+            batch=flush.batch_size, padded_batch=flush.padded_batch,
+            backend=str(backend), executor=exec_label,
+            cache_hit=flush.cache_hit, n_shards=flush.n_shards,
+            inflight_depth=flush.inflight_depth, seq=flush.seq)
+        tr.complete("dispatch", ts=flush.t_dispatch, end=flush.t_launched,
+                    cat="flush", track="flushes", parent=fid,
+                    cache_hit=flush.cache_hit)
+        tr.complete("inflight", ts=flush.t_launched, end=t_wait,
+                    cat="flush", track="flushes", parent=fid)
+        tr.complete("wait", ts=t_wait, end=t_retire, cat="flush",
+                    track="flushes", parent=fid)
+        tr.complete("retire", ts=t_retire, end=t_end, cat="flush",
+                    track="flushes", parent=fid,
+                    requests=len(records))
+        labels = (op, bucket, backend, exec_label)
+        self._m_wait.labels(*labels).observe(t_retire - t_wait, now=t_retire)
+        lat = self._m_latency.labels(*labels)
+        qwait = self._m_queue.labels(*labels)
+        slo = obs.slo
+        for rec in records:
+            tr.complete(
+                f"request:{op}", ts=rec.t_submit, end=t_end, cat="request",
+                track="requests", parent=fid, rid=rec.rid, op=op,
+                bucket=bucket_l, shape=list(rec.shape),
+                backend=str(backend))
+            lat.observe(t_end - rec.t_submit, now=t_end)
+            qwait.observe(rec.queue_s, now=t_end)
+            if slo is not None:
+                slo.observe(op=op, latency_s=t_end - rec.t_submit,
+                            t_done=t_end, t_submit=rec.t_submit,
+                            deadline=rec.deadline)
 
     def _queue_depth(self, op: str, bucket: Tuple[int, ...]) -> int:
         return len(self._queues.get((op, bucket), ()))

@@ -56,8 +56,8 @@ class InFlightFlush:
 
     __slots__ = ("seq", "key", "entries", "t_dispatch", "t_launched",
                  "backend", "batch_size", "padded_batch", "cache_hit",
-                 "inflight_depth", "n_shards", "retired", "_out", "_host",
-                 "_retire_cb")
+                 "inflight_depth", "n_shards", "retired", "span_id",
+                 "_out", "_host", "_retire_cb")
 
     def __init__(self, out, n_shards: int = 1):
         self._out = out            # device result tree (async futures)
@@ -75,6 +75,7 @@ class InFlightFlush:
         self.padded_batch = 0      # device batch after padding/rounding
         self.cache_hit = False
         self.inflight_depth = 1
+        self.span_id: Optional[int] = None  # reserved flush-span id (obs)
         self._retire_cb: Optional[Callable] = None
 
     def ready(self) -> bool:

@@ -66,6 +66,9 @@ class LocalExecutor:
     """
 
     n_shards: int = 1
+    # optional repro.obs.Observability bundle; the engine attaches its own
+    # when it carries one, so launches are traced where they happen
+    obs = None
 
     def cache_token(self):
         """Executor identity mixed into the engine's executable-cache key."""
@@ -92,7 +95,19 @@ class LocalExecutor:
         cross-device gather that costs more than the flush's compute
         (measured ~3x the solve time at 8 host devices).
         """
-        out = fn(jnp.asarray(batch), *map(jnp.asarray, n_active))
+        obs = self.obs
+        if obs is None:
+            out = fn(jnp.asarray(batch), *map(jnp.asarray, n_active))
+        else:
+            t0 = obs.clock()
+            out = fn(jnp.asarray(batch), *map(jnp.asarray, n_active))
+            obs.tracer.complete(
+                "launch", ts=t0, end=obs.clock(), cat="launch",
+                track="launch", executor=self.describe(),
+                batch=int(np.shape(batch)[0]), n_shards=self.n_shards)
+            obs.metrics.counter(
+                "serve_launches_total", "Device launches by executor.",
+                ("executor", )).labels(self.describe()).inc()
         return InFlightFlush(out, n_shards=self.n_shards)
 
     def run(self, fn: Callable, batch, n_active):

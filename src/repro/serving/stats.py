@@ -36,10 +36,17 @@ class RequestRecord:
     t_dispatch: float = 0.0    # when the flush launched (non-blocking)
     inflight_depth: int = 1    # outstanding flushes right after dispatch
                                # (1 = synchronous engine)
+    deadline: float = float("inf")  # flush-by time (submit + max_delay);
+                                    # inf = no deadline was tracked
 
     @property
     def latency_s(self) -> float:
         return self.t_done - self.t_submit
+
+    @property
+    def deadline_missed(self) -> bool:
+        """Fulfilled after its flush deadline had already passed."""
+        return self.t_done > self.deadline
 
     @property
     def inflight_s(self) -> float:
@@ -197,6 +204,7 @@ class ServingStats:
         # than blocked waiting
         overlap_s = float(sum(f.overlap_s for f in self.flush_records))
         span_s = overlap_s + float(sum(f.wait_s for f in self.flush_records))
+        deadline_misses = sum(1 for r in self.records if r.deadline_missed)
         return {
             "requests": len(self.records),
             "wall_s": span,
@@ -224,6 +232,9 @@ class ServingStats:
             "overlap_frac": (overlap_s / span_s if span_s > 0 else 0.0),
             "overlap_s": overlap_s,
             "plan_switches": len(self.plan_switches),
+            "deadline_miss_count": deadline_misses,
+            "deadline_miss_frac": (deadline_misses / len(self.records)
+                                   if self.records else 0.0),
         }
 
     # -- fabric-model hooks -------------------------------------------------

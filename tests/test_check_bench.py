@@ -162,3 +162,45 @@ def test_autotune_gate_without_default_row_skips():
     doc = _doc([{"plan": "measured", "T": 16, "requests_per_s": 10.0}])
     lines, ok = check_bench.autotune_gate("a.json", doc, tol=0.25)
     assert ok and any("skipped" in ln for ln in lines)
+
+
+# ---------------------------------------------------------------------------
+# provenance metadata (benchmarks/common.emit_json stamps it; the gate
+# must ignore it)
+# ---------------------------------------------------------------------------
+
+def test_provenance_block_is_not_a_row_source():
+    """The provenance block describes the run (git SHA, emission time, jax
+    version), not a measurement: it must never enter the row diff, so two
+    docs differing only in provenance compare clean."""
+    rows = [{"T": 16, "S": 4, "policy": "tile", "requests_per_s": 100.0}]
+    base = {"rows": rows,
+            "provenance": {"git_sha": "aaa", "emitted_at": "2026-01-01",
+                           "jax_version": "0.4", "device_count": 1}}
+    fresh = {"rows": rows,
+             "provenance": {"git_sha": "bbb", "emitted_at": "2026-08-07",
+                            "jax_version": "0.5", "device_count": 8}}
+    assert [s for s, _ in check_bench.iter_rows(base)] == ["rows"]
+    lines, ok = check_bench.compare_docs("x.json", base, fresh, tol=0.25)
+    assert ok
+    text = "\n".join(lines)
+    assert "git_sha" not in text and "REGRESSION" not in text
+    # even a list-of-dicts-shaped provenance block stays out of the diff
+    weird = {"rows": rows, "provenance": [{"git_sha": "ccc"}]}
+    assert [s for s, _ in check_bench.iter_rows(weird)] == ["rows"]
+
+
+def test_emit_json_stamps_provenance(tmp_path, monkeypatch):
+    import importlib.util
+    spec = importlib.util.spec_from_file_location(
+        "bench_common", REPO_ROOT / "benchmarks" / "common.py")
+    common = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(common)
+    monkeypatch.setattr(common, "REPO_ROOT", tmp_path)
+    path = common.emit_json("provtest", {"rows": [{"T": 8, "x_us": 1.0}]})
+    doc = __import__("json").loads(path.read_text())
+    prov = doc["provenance"]
+    assert set(prov) == {"git_sha", "emitted_at", "jax_version", "backend",
+                        "device_count"}
+    assert prov["jax_version"] and prov["device_count"] >= 1
+    assert prov["emitted_at"].startswith("20")
