@@ -10,6 +10,7 @@ Prints ``name,us_per_call,derived`` CSV.
   roofline -- (arch x shape) roofline terms from the dry-run records
   serve -- batched multi-tenant serving throughput (repro.serving)
   autotune -- tuned-vs-default serving-plan gain (serving.autotune)
+  cold_start -- fresh-replica TTFR: cold JIT vs warm disk cache vs warmup
 """
 import argparse
 import sys
@@ -24,9 +25,10 @@ def main() -> None:
                     help="larger sweeps (slow on CPU)")
     args = ap.parse_args()
 
-    from . import (autotune_gain, dse, fig1_bottlenecks, fig6_exec_time,
-                   fig7_energy, fig8_frobenius, perf_variants, roofline,
-                   serve_throughput, table3_configs)
+    from . import (autotune_gain, cold_start, dse, fig1_bottlenecks,
+                   fig6_exec_time, fig7_energy, fig8_frobenius,
+                   perf_variants, roofline, serve_throughput,
+                   table3_configs)
     suite = {
         "table3": table3_configs,
         "fig8": fig8_frobenius,
@@ -38,6 +40,7 @@ def main() -> None:
         "perf": perf_variants,
         "serve": serve_throughput,
         "autotune": autotune_gain,
+        "cold_start": cold_start,
     }
     only = set(args.only.split(",")) if args.only else None
     print("name,us_per_call,derived")

@@ -31,6 +31,10 @@ default-plan row's throughput within the tolerance -- an autotuner that
 "wins" the search but loses the measurement is a cost-model bug, and the
 gate catches it even when the file was not re-emitted this run (the
 committed rows themselves must honor the invariant).
+``BENCH_cold_start.json`` carries one too: the warm rows (warm disk cache /
+``--warmup``) must remove >= 80% of the cold row's time-to-first-response,
+minus tolerance slack -- a warm replica that still pays compile-scale
+first-request latency is a persistent-cache regression.
 
 A file whose content is byte-identical to HEAD was not re-emitted this run
 and is skipped for the row-vs-HEAD diff.  The tolerance (default 25% from
@@ -54,6 +58,7 @@ REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
 METRIC_PREFERENCE = (
     ("requests_per_s", True),
     ("us_per_request", False),
+    ("ttfr_ms", False),
     ("mm_engine_us", False),
     ("dle_scan_us", False),
     ("us_per_call", False),
@@ -150,6 +155,37 @@ def autotune_gate(name: str, doc: dict, tol: float) -> tuple[list, bool]:
     return [header] + lines, ok
 
 
+def cold_start_gate(name: str, doc: dict, tol: float) -> tuple[list, bool]:
+    """Intra-file invariant for BENCH_cold_start.json: every warm row
+    (warm_disk / warmup) must remove >= 80% of the cold row's
+    time-to-first-response, with the tolerance as slack on the remaining
+    fraction (tol 0.25 -> warm TTFR must stay under 45% of cold).  A warm
+    replica still paying compile-scale first-request latency means the
+    persistent executable cache stopped doing its one job."""
+    rows = [r for _, r in iter_rows(doc)
+            if isinstance(r.get("mode"), str)
+            and isinstance(r.get("ttfr_ms"), (int, float))]
+    cold = [float(r["ttfr_ms"]) for r in rows if r["mode"] == "cold"]
+    if not cold or min(cold) <= 0:
+        return [f"{name}: no cold row; cold-start gate skipped"], True
+    base = min(cold)
+    ceiling = base * (0.2 + tol)
+    lines, ok = [], True
+    for r in rows:
+        if r["mode"] == "cold":
+            continue
+        ttfr = float(r["ttfr_ms"])
+        verdict = "ok"
+        if ttfr > ceiling:
+            verdict, ok = "STILL-COLD", False
+        lines.append(f"  {verdict:<13} warm[{r['mode']}] ttfr "
+                     f"{ttfr:.1f}ms vs cold {base:.1f}ms "
+                     f"(reduction {1.0 - ttfr / base:.2f})")
+    header = (f"{name}: cold-start gate (warm removes >= 80% of cold "
+              f"TTFR, {tol * 100:.0f}% slack)")
+    return [header] + lines, ok
+
+
 def compare_file(name: str, tol: float) -> tuple[list, bool]:
     """Returns (report lines, ok)."""
     fresh_path = REPO_ROOT / name
@@ -159,10 +195,13 @@ def compare_file(name: str, tol: float) -> tuple[list, bool]:
     extra_lines: list = []
     extra_ok = True
     if name == "BENCH_autotune_gain.json":
-        # intra-file gate runs on the working-tree copy whether or not it
+        # intra-file gates run on the working-tree copy whether or not it
         # was re-emitted: committed rows must honor the invariant too
         extra_lines, extra_ok = autotune_gate(name, json.loads(fresh_text),
                                               tol)
+    elif name == "BENCH_cold_start.json":
+        extra_lines, extra_ok = cold_start_gate(name,
+                                                json.loads(fresh_text), tol)
     base_text = committed_copy(name)
     if base_text is None:
         return ([f"{name}: not in HEAD (new benchmark); diff skipped"]

@@ -12,7 +12,10 @@
 #   2. serving smoke        -- submit -> bucket -> batch -> cache -> unpack,
 #      including a sharded-flush parity leg over every visible device and
 #      an async-pipeline leg (sync-vs-async bit-for-bit parity on a mixed
-#      burst, in-flight depth telemetry > 1); runs in both matrix jobs
+#      burst, in-flight depth telemetry > 1) and a cold-start leg (a
+#      replica seeds a --cache-dir, a fresh replica warms every
+#      executable from disk with zero compiles, bit-for-bit parity);
+#      runs in both matrix jobs
 #   3. backend-sweep smoke  -- one sweep point: a router splits two buckets
 #      across two kernel backends in one server, verified against numpy
 #   4. observability smoke  -- a traced serve_pca run must export a

@@ -55,7 +55,7 @@ from repro.core import PCAConfig
 from repro.core.memory_model import VIRTEX_US
 from repro.obs import Observability, device_profile, validate_trace
 from repro.serving import (BucketPolicy, PCAServer, POLICIES, TrafficProfile,
-                           autotune, mesh_executor, plan_grid,
+                           aot_supported, autotune, mesh_executor, plan_grid,
                            server_for_plan)
 from repro.serving.autotune import synthesize
 
@@ -208,6 +208,48 @@ def selftest() -> int:
     slo = obs.summary()["slo"]
     assert slo["requests"] == len(mats) + len(svd_in), slo
 
+    # cold-start leg: seed a persistent --cache-dir with one replica's AOT
+    # executables, then a *fresh* replica pointed at the same directory
+    # must warm up entirely from disk (every warmup key a disk hit, zero
+    # compiles) and serve the identical burst *bit-for-bit* equal to the
+    # cold-JIT replica -- the AOT serialize/deserialize round trip must
+    # never touch the math
+    cold_info = {"skipped": True}
+    if aot_supported():
+        import tempfile
+        seed_profile = TrafficProfile.from_shapes(
+            [("eigh", m.shape, 1) for m in mats]
+            + [("svd", a.shape, 1) for a in svd_in])
+        with tempfile.TemporaryDirectory() as cdir:
+            seeder = PCAServer(PCAConfig(T=8, S=4, sweeps=14),
+                               policy=BucketPolicy(T=8), max_delay_s=10.0,
+                               cache_dir=cdir)
+            seeded = seeder.warmup(seed_profile)
+            assert seeded["compile"] == seeded["executables"], seeded
+            stores = seeder.cache_summary()["disk"]["stores"]
+            assert stores == seeded["executables"], seeder.cache_summary()
+            warm = PCAServer(PCAConfig(T=8, S=4, sweeps=14),
+                             policy=BucketPolicy(T=8), max_delay_s=10.0,
+                             cache_dir=cdir)
+            warmed = warm.warmup(seed_profile)
+            assert warmed["disk"] == warmed["executables"], warmed
+            assert warmed["compile"] == 0, warmed
+            for op, traffic in (("eigh", mats), ("svd", svd_in)):
+                got = warm.solve_many(traffic, op=op)
+                want = srv.solve_many(traffic, op=op)
+                for g, w in zip(got, want):
+                    for field in (f.name for f in dataclasses.fields(g)):
+                        np.testing.assert_array_equal(
+                            np.asarray(getattr(g, field)),
+                            np.asarray(getattr(w, field)),
+                            err_msg=f"warm-vs-cold {op}.{field}")
+            warm_summary = warm.stats.summary()
+            assert warm_summary["cache_hit_rate"] == 1.0, warm_summary
+            cold_info = {"skipped": False,
+                         "executables": warmed["executables"],
+                         "disk_hits": warmed["disk"],
+                         "warmup_s": round(warmed["seconds"], 4)}
+
     print("serve_pca selftest ok:",
           json.dumps({k: round(v, 4) for k, v in summary.items()}))
     print("serve_pca sharded selftest ok:", json.dumps({
@@ -224,6 +266,7 @@ def selftest() -> int:
         "trace_events": len(trace["traceEvents"]),
         "request_spans": len(requests),
         "goodput_rps": round(slo["goodput_rps"], 2)}))
+    print("serve_pca cold-start selftest ok:", json.dumps(cold_info))
     return 0
 
 
@@ -286,6 +329,18 @@ def main(argv=None) -> int:
                     help="latency SLO target: report goodput (requests/s "
                          "served within the target) and miss counts next "
                          "to raw throughput; implies observability on")
+    ap.add_argument("--cache-dir", default=None,
+                    help="persistent executable-cache directory: cache "
+                         "misses AOT-compile and serialize here "
+                         "(atomically), and a fresh replica pointed at a "
+                         "warm directory loads its executables without "
+                         "touching XLA -- the zero-cold-start path")
+    ap.add_argument("--warmup", default=None, metavar="PROFILE",
+                    help="pre-build every executable this traffic-profile "
+                         "JSON (--profile-out format) implies, before any "
+                         "request is accepted; pairs with --cache-dir so "
+                         "the warmup is a disk load on every replica after "
+                         "the first")
     ap.add_argument("--jax-profile", default=None,
                     help="directory for a jax.profiler device trace "
                          "around the timed pass (TensorBoard/"
@@ -311,7 +366,13 @@ def main(argv=None) -> int:
                     executor=executor,
                     max_inflight=args.inflight,
                     obs=obs,
+                    cache_dir=args.cache_dir,
                     **({"clock": obs.clock} if obs is not None else {}))
+    warmup_info = None
+    if args.warmup:
+        # pre-build the profile's executables before the first request --
+        # with a warm --cache-dir this is a disk load, not a compile
+        warmup_info = srv.warmup(TrafficProfile.load(args.warmup))
     mats = mixed_traffic(args.requests, args.op, dims, args.seed)
     srv.solve_many(mats, op=args.op)       # warmup: compile the buckets
     # the warmup pass doubles as the profiling pass: its telemetry is the
@@ -336,7 +397,9 @@ def main(argv=None) -> int:
             measure_top_k=(args.measure_top_k
                            if args.autotune == "measured" else 0),
             seed=args.seed, obs=obs)
-        srv.apply_plan(result.best)
+        # the swap pre-warms the tuned plan's executables from the profile
+        # before any ticket is re-bucketed onto them
+        srv.apply_plan(result.best, warm_profile=profile)
         srv.solve_many(mats, op=args.op)   # re-warmup under the tuned plan
         tune_info = result.to_json()
     srv.stats.reset()
@@ -367,6 +430,8 @@ def main(argv=None) -> int:
                    "max_inflight": args.inflight},
         "plan": srv.describe_plan(),
         "autotune": tune_info,
+        "warmup": warmup_info,
+        "cache": srv.cache_summary(),
         "obs": obs_info,
         "summary": summary,
         "fabric_model": {

@@ -15,7 +15,11 @@ overlaps host-side batching with device execution (N=1 is the synchronous
 engine).  The whole (policy, T, pow2 cap, S, inflight, executor) tuple is a
 ``ServingPlan`` the traffic-driven autotuner (``autotune``) searches from a
 captured ``TrafficProfile`` and hot-swaps onto a live server via
-``PCAServer.apply_plan``.
+``PCAServer.apply_plan``.  Executables live in a two-tier cache
+(``cache``): a bounded in-memory LRU plus an optional persistent
+disk tier of serialized AOT executables, so a fresh replica pointed at a
+warm ``cache_dir`` -- or pre-built via ``PCAServer.warmup(profile)`` --
+serves its first request without ever touching XLA.
 """
 from .autotune import (AutotuneResult, CostModel, ServingPlan,
                        TrafficProfile, TRACE_KINDS, autotune, plan_grid,
@@ -23,6 +27,8 @@ from .autotune import (AutotuneResult, CostModel, ServingPlan,
                        trace_dims)
 from .batching import (BucketPolicy, POLICIES, pad_to_bucket, padding_waste,
                        stack_requests)
+from .cache import (DiskCache, ExecutableCache, LRUCache, SolverKey,
+                    aot_supported, content_hash, environment_fingerprint)
 from .engine import (BackendRouter, OPS, PCAServer, ServedEigh, ServedPCA,
                      ServedSVD, Ticket, threshold_router)
 from .inflight import InFlightFlush, InFlightQueue
@@ -36,13 +42,15 @@ from .stats import FlushRecord, RequestRecord, ServingStats, percentile
 __all__ = [
     "AutotuneResult", "BackendRouter", "BatchedEighResult",
     "BatchedPCAResult", "BatchedSVDResult", "BucketPolicy", "CostModel",
-    "FlushRecord", "InFlightFlush", "InFlightQueue", "LocalExecutor",
-    "MeshExecutor", "OPS", "PCAServer", "POLICIES", "RequestRecord",
-    "ServedEigh", "ServedPCA", "ServedSVD", "ServingPlan", "ServingStats",
-    "Ticket", "TrafficProfile", "TRACE_KINDS", "autotune",
-    "build_solver_fn", "host_mesh", "jacobi_eigh_batched",
-    "jacobi_svd_batched", "mesh_executor", "pad_to_bucket",
-    "padding_waste", "pca_fit_batched", "pca_transform_batched",
-    "percentile", "plan_grid", "replay", "server_for_plan", "solve_work",
-    "stack_requests", "synthetic_trace", "threshold_router", "trace_dims",
+    "DiskCache", "ExecutableCache", "FlushRecord", "InFlightFlush",
+    "InFlightQueue", "LRUCache", "LocalExecutor", "MeshExecutor", "OPS",
+    "PCAServer", "POLICIES", "RequestRecord", "ServedEigh", "ServedPCA",
+    "ServedSVD", "ServingPlan", "ServingStats", "SolverKey", "Ticket",
+    "TrafficProfile", "TRACE_KINDS", "aot_supported", "autotune",
+    "build_solver_fn", "content_hash", "environment_fingerprint",
+    "host_mesh", "jacobi_eigh_batched", "jacobi_svd_batched",
+    "mesh_executor", "pad_to_bucket", "padding_waste", "pca_fit_batched",
+    "pca_transform_batched", "percentile", "plan_grid", "replay",
+    "server_for_plan", "solve_work", "stack_requests", "synthetic_trace",
+    "threshold_router", "trace_dims",
 ]

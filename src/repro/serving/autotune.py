@@ -226,6 +226,19 @@ class TrafficProfile:
     def captured_plan(self) -> Dict:
         return dict(self.captured)
 
+    def warmup_shapes(self) -> Tuple[Tuple[str, Tuple[int, ...]], ...]:
+        """The distinct (op, shape) pairs this profile implies -- what
+        ``PCAServer.warmup``/``warmup_keys`` expands into concrete
+        (op, bucket, batch, backend) executables under a live plan, and
+        what ``serve_pca --warmup profile.json`` pre-builds before the
+        first request lands."""
+        seen, out = set(), []
+        for op, shape, _n in self.shape_counts:
+            if (op, shape) not in seen:
+                seen.add((op, shape))
+                out.append((op, shape))
+        return tuple(out)
+
     # -- JSON round trip ----------------------------------------------------
     def to_json(self) -> str:
         doc = dataclasses.asdict(self)

@@ -45,6 +45,7 @@ import numpy as np
 
 from repro.core.pca import PCAConfig
 from .batching import BucketPolicy, padding_waste, stack_requests
+from .cache import DEFAULT_MAX_ENTRIES, ExecutableCache, SolverKey
 from .inflight import InFlightFlush, InFlightQueue
 from .sharded import LocalExecutor
 from .stats import RequestRecord, ServingStats
@@ -254,6 +255,16 @@ class PCAServer:
         uninstrumented fast path: one attribute check per stage, measured
         within 3% of bare throughput.  Give the bundle the same ``clock``
         as the server so spans line up with telemetry.
+      cache_dir: optional directory for the persistent executable tier
+        (``serving.cache.DiskCache``).  When set (and the installed jax
+        can serialize executables), cache misses compile ahead-of-time and
+        serialize to disk, so the *next* replica pointed at the same
+        directory loads them without touching XLA -- the cold-start
+        answer.  ``None`` (the default) is memory-tier-only serving.
+      max_cached_executables: in-memory executable cap; least-recently-
+        dispatched entries are evicted beyond it (a plan-churning server
+        used to leak every executable it ever compiled).  ``None`` =
+        unbounded.
       clock: injectable monotonic clock (tests drive deadlines manually).
     """
 
@@ -268,6 +279,8 @@ class PCAServer:
         executor: Optional[LocalExecutor] = None,
         max_inflight: int = 1,
         obs=None,
+        cache_dir=None,
+        max_cached_executables: Optional[int] = DEFAULT_MAX_ENTRIES,
         clock: Callable[[], float] = time.monotonic,
     ):
         if max_inflight < 1:
@@ -285,7 +298,8 @@ class PCAServer:
         self.stats = ServingStats(clock=clock)
         self._queues: Dict[Tuple, List[_Pending]] = {}
         self._inflight = InFlightQueue()
-        self._cache: Dict[Tuple, Callable] = {}
+        self._cache = ExecutableCache(max_entries=max_cached_executables,
+                                      cache_dir=cache_dir)
         self._rid = itertools.count()
         self._seq = itertools.count()
         self._exec_label = self.executor.describe()
@@ -326,6 +340,16 @@ class PCAServer:
             "Requests queued, not yet dispatched.").labels()
         self._m_swaps = m.counter(
             "serve_plan_swaps_total", "apply_plan hot-swaps.").labels()
+        self._m_exec_cached = m.gauge(
+            "serve_executables_cached",
+            "Executables held in the in-memory cache tier.").labels()
+        self._m_disk = m.counter(
+            "serve_cache_disk_total",
+            "Persistent executable-tier lookups by outcome.", ("event",))
+        self._m_warm = m.counter(
+            "serve_warmup_executables_total",
+            "Executables pre-built by warmup(), by cache source.",
+            ("source",))
         if getattr(self.executor, "obs", None) is None:
             self.executor.obs = self.obs
 
@@ -417,7 +441,7 @@ class PCAServer:
             "executor": self.executor.describe(),
         }
 
-    def apply_plan(self, plan) -> Dict:
+    def apply_plan(self, plan, warm_profile=None) -> Dict:
         """Atomically switch this server onto a new serving plan.
 
         ``plan`` is any object with the ``serving.autotune.ServingPlan``
@@ -442,10 +466,15 @@ class PCAServer:
         plan compile identical executables -- including the matmul block
         size when ``config.backend`` routes through the MM-Engine -- and
         serve bit-identical results.  The executable cache is keyed on
-        (op, bucket, batch, config, executor), none of which mention the
-        policy, so buckets both plans agree on keep their compiled
-        executables across a swap that preserves T and S.  Returns the
-        switch record also appended to ``stats.plan_switches``.
+        (op, bucket, batch, solver numerics, executor), none of which
+        mention the policy or the scheduling facts T/S, so buckets both
+        plans agree on keep their compiled executables across *any* swap
+        that preserves bucketing and flush size.  Executables the new plan
+        *does* need fresh are pre-warmed before the swap (from the queued
+        requests' shapes, plus ``warm_profile`` when given), so the first
+        post-swap flush dispatches warm instead of stalling on XLA.
+        Returns the switch record also appended to
+        ``stats.plan_switches``.
         """
         if plan.max_inflight < 1:
             raise ValueError(
@@ -460,6 +489,24 @@ class PCAServer:
         new_policy = plan.policy()
         new_executor = plan.build_executor()
         old_plan = self.describe_plan()
+        # pre-warm the incoming plan's executables while the old plan is
+        # still serving: every shape we know about (queued requests, plus
+        # the traffic profile when given) compiles -- or loads from the
+        # disk tier -- under the new plan's facts, before any ticket is
+        # re-bucketed onto them
+        new_config = dataclasses.replace(self.config, T=new_policy.T,
+                                         S=plan.max_batch)
+        warm_shapes = sorted({(e.ticket.op, e.matrix.shape)
+                              for q in self._queues.values() for e in q})
+        if warm_profile is not None:
+            warm_shapes += self._profile_shapes(warm_profile)
+        prewarmed = {"memory": 0, "disk": 0, "compile": 0}
+        for op, bucket, batch, backend in self._enumerate_keys(
+                warm_shapes, new_policy, new_executor, new_config,
+                plan.max_batch):
+            _, source = self._executable_for(op, bucket, batch, backend,
+                                             new_config, new_executor)
+            prewarmed[source] += 1
         self._inflight.retire_to_depth(0)
         queued = sorted((e for q in self._queues.values() for e in q),
                         key=lambda e: e.rid)
@@ -472,7 +519,7 @@ class PCAServer:
                                           S=self.max_batch)
         self._exec_label = self.executor.describe()
         switch = {"from": old_plan, "to": self.describe_plan(),
-                  "requeued": len(queued)}
+                  "requeued": len(queued), "prewarmed": prewarmed}
         now = self.clock()
         self.stats.record_plan_switch(switch, now=now)
         if self.obs is not None:
@@ -526,17 +573,21 @@ class PCAServer:
             # is recorded at retire time, when its end is known
             flush_span = obs.tracer.new_id()
             t0 = self.clock()
-            fn, hit = self._executable(op, bucket, bp, backend)
-            if not hit:
-                # the executable *build* (solver closure + jit wrapper);
-                # XLA compilation itself runs lazily inside this flush's
-                # first launch, so its cost lands in the dispatch span
+            fn, source = self._executable(op, bucket, bp, backend)
+            if source != "memory":
+                # the executable *build*: a jit-wrapper construction on the
+                # memory-only path (XLA itself compiles lazily inside the
+                # first launch, landing in the dispatch span), a full AOT
+                # compile when the disk tier is armed, or a deserialize on
+                # a disk hit ("aot_load")
                 obs.tracer.complete(
-                    "compile", ts=t0, end=self.clock(), cat="compile",
+                    "compile" if source == "compile" else "aot_load",
+                    ts=t0, end=self.clock(), cat="compile",
                     track="flushes", parent=flush_span, op=op,
                     bucket=list(bucket), batch=bp, backend=str(backend))
         else:
-            fn, hit = self._executable(op, bucket, bp, backend)
+            fn, source = self._executable(op, bucket, bp, backend)
+        hit = source != "compile"
         flush = self.executor.submit(fn, batch, n_active)
         flush.seq = next(self._seq)
         flush.key = key
@@ -671,13 +722,110 @@ class PCAServer:
         return self.config.backend
 
     def _executable(self, op: str, bucket: Tuple[int, ...], batch: int,
-                    backend: Optional[str]) -> Tuple[Callable, bool]:
-        cfg = dataclasses.replace(self.config, backend=backend)
-        key = (op, bucket, batch, cfg, self.executor.cache_token())
-        hit = key in self._cache
-        if not hit:
-            self._cache[key] = self.executor.compile(op, cfg, bucket, batch)
-        return self._cache[key], hit
+                    backend: Optional[str]) -> Tuple[Callable, str]:
+        return self._executable_for(op, bucket, batch, backend,
+                                    self.config, self.executor)
+
+    def _executable_for(self, op: str, bucket: Tuple[int, ...], batch: int,
+                        backend: Optional[str], config: PCAConfig,
+                        executor: LocalExecutor) -> Tuple[Callable, str]:
+        """Two-tier executable lookup under explicit plan facts.
+
+        Returns (fn, source) with source one of ``"memory"`` (steady
+        state), ``"disk"`` (AOT deserialize, promoted into memory) or
+        ``"compile"``.  The key is ``SolverKey``-based -- the numerics
+        subset the compiled solver actually depends on -- so configs that
+        differ only in scheduling facts (T, S) share one executable.  With
+        a disk tier armed, misses compile ahead-of-time (the result is
+        serializable); without one, the executor's shared jit wrapper.
+        The explicit (config, executor) arguments let ``apply_plan``
+        pre-warm an *incoming* plan's executables before the swap.
+        """
+        cfg = dataclasses.replace(config, backend=backend)
+        key = (op, bucket, batch, SolverKey.from_config(cfg),
+               executor.cache_token())
+        fn, source = self._cache.lookup(key)
+        if fn is None:
+            source = "compile"
+            if self._cache.disk is not None:
+                fn = executor.aot_compile(op, cfg, bucket, batch)
+                self._cache.store(key, fn, persist=True)
+            else:
+                fn = executor.compile(op, cfg, bucket, batch)
+                self._cache.store(key, fn)
+        if self.obs is not None:
+            if self._cache.disk is not None and source != "memory":
+                self._m_disk.labels(
+                    "hit" if source == "disk" else "miss").inc()
+            self._m_exec_cached.set(len(self._cache))
+        return fn, source
+
+    # -- warmup / persistent tier -------------------------------------------
+    @staticmethod
+    def _profile_shapes(profile) -> List[Tuple[str, Tuple[int, ...]]]:
+        """(op, shape) pairs of a ``TrafficProfile`` (anything with
+        ``shape_counts``) or of a bare iterable of (op, shape[, n])."""
+        rows = getattr(profile, "shape_counts", profile)
+        return [(row[0], tuple(row[1])) for row in rows]
+
+    def _enumerate_keys(self, shapes, policy, executor, config,
+                        max_batch) -> List[Tuple]:
+        """Distinct (op, bucket, batch, backend) executables the given
+        (op, shape) pairs imply under the given plan facts.  The batch is
+        the plan's padded flush size -- the one executable steady-state
+        ``pad_batches`` traffic dispatches."""
+        keys, seen = [], set()
+        batch = executor.round_batch(max_batch)
+        for op, shape in shapes:
+            bucket = policy.bucket_shape(shape)
+            backend = (self.backend_router(op, bucket)
+                       if self.backend_router is not None
+                       else config.backend)
+            k = (op, bucket, batch, backend)
+            if k not in seen:
+                seen.add(k)
+                keys.append(k)
+        return keys
+
+    def warmup_keys(self, profile) -> List[Tuple]:
+        """The distinct (op, bucket, batch, backend) executables
+        ``profile`` implies under the plan currently in force."""
+        return self._enumerate_keys(self._profile_shapes(profile),
+                                    self.policy, self.executor,
+                                    self.config, self.max_batch)
+
+    def warmup(self, profile) -> Dict:
+        """Pre-build every executable ``profile`` implies.
+
+        Each key resolves through the same two-tier path a live flush
+        uses: memory hit (already warm), disk hit (AOT deserialize -- the
+        fast path this method exists to arm), or compile (which, with a
+        disk tier armed, also serializes the executable for the *next*
+        replica).  Returns a summary dict; with obs attached the pass is
+        traced as one ``warmup`` span with per-source counters in the
+        metric registry.
+        """
+        t0 = self.clock()
+        keys = self.warmup_keys(profile)
+        counts = {"memory": 0, "disk": 0, "compile": 0}
+        for op, bucket, batch, backend in keys:
+            _, source = self._executable(op, bucket, batch, backend)
+            counts[source] += 1
+        now = self.clock()
+        doc = {"executables": len(keys), "seconds": now - t0, **counts}
+        if self.obs is not None:
+            for source, n in counts.items():
+                if n:
+                    self._m_warm.labels(source).inc(n, now=now)
+            self.obs.tracer.complete(
+                "warmup", ts=t0, end=now, cat="control", track="control",
+                executables=len(keys), **counts)
+        return doc
+
+    def cache_summary(self) -> Dict:
+        """Both cache tiers' counters, JSON-able (see
+        ``serving.cache.ExecutableCache.summary``)."""
+        return self._cache.summary()
 
     @staticmethod
     def _unpack(op: str, out, i: int, shape: Tuple[int, ...]):

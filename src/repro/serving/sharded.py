@@ -40,8 +40,20 @@ from jax.sharding import Mesh
 from repro.core.pca import PCAConfig
 from repro.parallel.sharding import (batch_axes, pad_to_multiple,
                                      rules_for_mesh)
+from .cache import SolverKey
 from .inflight import InFlightFlush
 from .solver import build_solver_fn
+
+
+def solver_structs(bucket: Tuple[int, ...],
+                   batch: int) -> Tuple[jax.ShapeDtypeStruct, ...]:
+    """Abstract input signature of one flush: the padded slab plus one
+    int32 per-problem true-size vector per bucket dimension (the uniform
+    ``build_solver_fn`` calling convention)."""
+    return (
+        jax.ShapeDtypeStruct((batch, *bucket), jnp.float32),
+        *(jax.ShapeDtypeStruct((batch,), jnp.int32) for _ in bucket),
+    )
 
 
 def _donate_kwargs() -> dict:
@@ -61,8 +73,9 @@ def _donate_kwargs() -> dict:
 class LocalExecutor:
     """Single-device flush execution (the seed behavior).
 
-    Stateless: the engine owns the executable cache; the executor only
-    decides batch rounding, compilation and dispatch.
+    Near-stateless: the engine owns the executable cache; the executor
+    decides batch rounding, compilation and dispatch, and memoizes its
+    shape-polymorphic ``jax.jit`` wrappers per solver (see ``compile``).
     """
 
     n_shards: int = 1
@@ -81,7 +94,34 @@ class LocalExecutor:
     def compile(self, op: str, config: PCAConfig,
                 bucket: Tuple[int, ...], batch: int) -> Callable:
         del bucket, batch  # single device: shape-polymorphic jit is enough
-        return jax.jit(build_solver_fn(op, config), **_donate_kwargs())
+        # one wrapper per solver, NOT per call: the engine's cache keys on
+        # (op, bucket, batch, ...) and used to receive a fresh jit wrapper
+        # for every key -- so two batch sizes of one bucket (or two buckets
+        # of one solver) each re-built and re-traced an identical solver
+        # closure with its own private jit trace cache.  Memoizing on the
+        # solver identity hands every key the *same* wrapper, whose shared
+        # trace cache compiles each distinct input shape exactly once no
+        # matter how many engine keys route through it.
+        memo = self.__dict__.setdefault("_solvers", {})
+        key = (op, SolverKey.from_config(config))
+        fn = memo.get(key)
+        if fn is None:
+            fn = memo[key] = jax.jit(build_solver_fn(op, config),
+                                     **_donate_kwargs())
+        return fn
+
+    def aot_compile(self, op: str, config: PCAConfig,
+                    bucket: Tuple[int, ...], batch: int):
+        """Ahead-of-time compile one concrete (bucket, batch) executable.
+
+        The ``jax.stages.Compiled`` this returns is what the persistent
+        cache tier serializes (``serving.cache.DiskCache``) and what
+        ``PCAServer.warmup`` pre-builds: calling it runs zero tracing and
+        zero XLA work.  It shares the memoized polymorphic wrapper, so a
+        later same-shape JIT call reuses the identical compilation.
+        """
+        return self.compile(op, config, bucket, batch).lower(
+            *solver_structs(bucket, batch)).compile()
 
     def submit(self, fn: Callable, batch, n_active) -> InFlightFlush:
         """Launch a flush without blocking (the pipeline's dispatch stage).
@@ -174,10 +214,7 @@ class MeshExecutor(LocalExecutor):
                 f"batch {batch} not a multiple of the data-axis size "
                 f"{self.n_shards}; round with round_batch() first")
         fn = build_solver_fn(op, config)
-        in_struct = (
-            jax.ShapeDtypeStruct((batch, *bucket), jnp.float32),
-            *(jax.ShapeDtypeStruct((batch,), jnp.int32) for _ in bucket),
-        )
+        in_struct = solver_structs(bucket, batch)
         out_struct = jax.eval_shape(fn, *in_struct)
         in_sh = self.rules.sharding_tree(batch_axes(in_struct), self.mesh)
         out_sh = self.rules.sharding_tree(batch_axes(out_struct), self.mesh)

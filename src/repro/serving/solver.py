@@ -28,6 +28,7 @@ from typing import Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.jacobi import DEFAULT_SWEEPS, jacobi_eigh
 from repro.core.pca import PCAConfig, evcr_cvcr
@@ -125,12 +126,22 @@ def jacobi_svd_batched(
     n_rows=None,
     n_cols=None,
     matmul_fn: Optional[Callable] = None,
+    rcond: Optional[float] = None,
     **eigh_kwargs,
 ) -> BatchedSVDResult:
     """Batched thin SVD via the Gram-matrix path (paper PCA datapath).
 
     A: (B, mb, nb) zero-padded.  All three matmuls (Gram, rotations, the
     U = A V back-projection) share the injected ``matmul_fn`` datapath.
+
+    Rank deficiency: the back-projection U = A V / s divides by singular
+    values the Gram path cannot resolve below ~sqrt(eps) * s_max -- for a
+    rank-deficient *live* input (s ~ 0 inside n_cols) that division
+    amplifies rounding noise in A V into garbage U columns.  Columns whose
+    singular value falls below ``rcond * s_max`` are therefore zeroed
+    exactly (their live counterparts keep bit-identical values: the mask
+    only ever turns noise into zeros).  ``rcond`` defaults to
+    sqrt(nb * eps_f32), a few times the Gram path's own noise floor.
     """
     A = jnp.asarray(A)
     if A.ndim != 3:
@@ -144,7 +155,15 @@ def jacobi_svd_batched(
                               **eigh_kwargs)
     s = jnp.sqrt(jnp.maximum(res.eigenvalues, 0.0))
     safe = jnp.maximum(s, 1e-30)
-    U = jax.vmap(mm)(A, res.eigenvectors) / safe[:, None, :]
+    if rcond is None:
+        rcond = float(np.sqrt(nb * np.finfo(np.float32).eps))
+    # relative cutoff per problem; an all-zero problem (s_max == 0) has no
+    # live column at all and U comes out exactly zero
+    cutoff = rcond * jnp.max(s, axis=-1, keepdims=True)
+    live = s > cutoff
+    U = jnp.where(live[:, None, :],
+                  jax.vmap(mm)(A, res.eigenvectors) / safe[:, None, :],
+                  0.0)
     Vt = jnp.swapaxes(res.eigenvectors, -1, -2)
     return BatchedSVDResult(U, s, Vt, n_rows, n_cols)
 

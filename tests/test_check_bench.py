@@ -165,6 +165,52 @@ def test_autotune_gate_without_default_row_skips():
 
 
 # ---------------------------------------------------------------------------
+# the intra-file cold-start gate (BENCH_cold_start.json)
+# ---------------------------------------------------------------------------
+
+def _cold_start_doc(cold_ms, warm):
+    rows = [{"mode": "cold", "ttfr_ms": cold_ms}]
+    rows += [{"mode": mode, "ttfr_ms": ms} for mode, ms in warm]
+    return _doc(rows)
+
+
+def test_cold_start_gate_warm_fast_passes():
+    doc = _cold_start_doc(650.0, [("warm_disk", 45.0), ("warmup", 3.0)])
+    lines, ok = check_bench.cold_start_gate("c.json", doc, tol=0.25)
+    assert ok and sum(ln.strip().startswith("ok") for ln in lines) == 2
+
+
+def test_cold_start_gate_warm_within_slack_passes():
+    """80% reduction required, tolerance as slack on the remainder: at tol
+    0.25 a warm TTFR up to 45% of cold still passes."""
+    doc = _cold_start_doc(100.0, [("warm_disk", 44.0)])
+    lines, ok = check_bench.cold_start_gate("c.json", doc, tol=0.25)
+    assert ok
+
+
+def test_cold_start_gate_still_cold_warm_row_fails():
+    doc = _cold_start_doc(100.0, [("warm_disk", 90.0), ("warmup", 3.0)])
+    lines, ok = check_bench.cold_start_gate("c.json", doc, tol=0.25)
+    assert not ok
+    assert any("STILL-COLD" in ln and "warm_disk" in ln for ln in lines)
+
+
+def test_cold_start_gate_without_cold_row_skips():
+    doc = _doc([{"mode": "warmup", "ttfr_ms": 3.0}])
+    lines, ok = check_bench.cold_start_gate("c.json", doc, tol=0.25)
+    assert ok and any("skipped" in ln for ln in lines)
+
+
+def test_ttfr_rows_gate_lower_is_better():
+    """The cold_start rows' ttfr_ms is a first-class (lower-is-better)
+    metric for the row-vs-HEAD diff too."""
+    base = _doc([{"mode": "warm_disk", "ttfr_ms": 40.0}])
+    fresh = _doc([{"mode": "warm_disk", "ttfr_ms": 90.0}])
+    lines, ok = check_bench.compare_docs("c.json", base, fresh, tol=0.25)
+    assert not ok and any("REGRESSION" in ln for ln in lines)
+
+
+# ---------------------------------------------------------------------------
 # provenance metadata (benchmarks/common.emit_json stamps it; the gate
 # must ignore it)
 # ---------------------------------------------------------------------------
