@@ -1,0 +1,280 @@
+"""Goodput under an SLO vs offered load, through saturation.
+
+The headline serving metric shifts here from closed-loop throughput to
+**goodput**: SLO-compliant requests/s under an *open-loop* arrival
+process (``repro.serving.frontend``).  Two stories, both on the live
+server with real pacing and real latencies:
+
+  load sweep   Poisson arrivals at 60/100/150/250% of the measured
+               closed-loop capacity, admission control on ("shed") vs
+               off ("none").  Past saturation the no-admission server
+               queues unboundedly and its goodput collapses; admission
+               sheds the infeasible tail and keeps serving inside the
+               SLO -- the committed rows must show >= 1.3x goodput at
+               the saturating points (gated by ``check_bench.py``).
+  fairness     a skewed two-tenant mix at 250% load -- a whale of large
+               refits (90% of traffic, relaxed SLO) and a mouse of
+               small latency-critical requests (10%, tight SLO) -- under
+               WFQ vs FIFO scheduling.  FIFO admits the mouse only when
+               the whale's backlog happens to dip under the mouse's
+               deadline; WFQ charges each tenant its *own* weighted
+               backlog, so the mouse rides alongside.  Committed rows
+               must show WFQ worst-tenant goodput >= 2x FIFO's.
+
+Offered rates are set relative to the capacity measured on this machine
+at run time, so the *load_pct* rows mean the same thing on any host; the
+dimensionless ``shed_frac`` and the intra-file ratio gates carry the
+regression signal that absolute rps cannot.
+
+Emits ``BENCH_goodput.json``.  ``--selftest`` runs the deterministic
+virtual-clock checks (bit-identical reruns, shed accounting) for the CI
+smoke; ``--metrics-out PATH`` additionally exports the fairness run's
+tenant-labeled metric families as Prometheus text (the nightly artifact).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from .common import emit, emit_json
+
+T = 16
+SWEEPS = 6
+BATCH = 8
+INFLIGHT = 2
+MAX_DELAY_S = 0.02
+LO, HI = 16, 40               # whale / load-sweep dims (uniform)
+MOUSE_LO, MOUSE_HI = 16, 24   # mouse dims: small interactive requests
+SLO_MS = 200.0
+MOUSE_SLO_MS = 50.0
+LOADS = (60, 100, 150, 250)
+N_LOAD = 240                  # requests per load-sweep run
+N_FAIR = 400                  # requests per fairness run
+SEED = 3
+
+
+def _server(clock=None):
+    from repro.core import PCAConfig
+    from repro.serving import BucketPolicy, PCAServer
+
+    kw = dict(policy=BucketPolicy(T=T), max_delay_s=MAX_DELAY_S,
+              max_batch=BATCH, max_inflight=INFLIGHT)
+    if clock is not None:
+        kw["clock"] = clock
+    return PCAServer(PCAConfig(T=T, S=BATCH, sweeps=SWEEPS), **kw)
+
+
+def _calibrate(srv):
+    """Closed-loop capacity (warm, steady-state rps) + a cost model
+    calibrated from the same run's telemetry -- the admission
+    controller's service predictions come from the hardware it will
+    gate, not from defaults."""
+    import numpy as np
+    from repro.serving import CostModel, TrafficProfile
+    from repro.serving.autotune import synthesize
+
+    rng = np.random.default_rng(5)
+    mats = [synthesize("eigh", (d, d), rng)
+            for d in rng.integers(LO, HI + 1, size=96)]
+    for m in mats:                      # warm every bucket's executable
+        srv.submit(m)
+    srv.drain()
+    srv.stats.reset()
+    t0 = time.perf_counter()
+    for m in mats:
+        srv.submit(m)
+    srv.drain()
+    capacity = len(mats) / (time.perf_counter() - t0)
+    model = CostModel.calibrated(TrafficProfile.from_stats(srv.stats))
+    srv.stats.reset()
+    return capacity, model
+
+
+def _whale_mouse(capacity):
+    from repro.serving import TenantSpec, generate, merge
+
+    whale = TenantSpec("whale")
+    mouse = TenantSpec("mouse", slo_ms=MOUSE_SLO_MS)
+    rate = 2.5 * capacity
+    stream = merge(
+        generate("poisson", rate=0.9 * rate, n=int(0.9 * N_FAIR),
+                 tenants=(whale,), seed=SEED, trace="uniform",
+                 lo=LO, hi=HI),
+        generate("poisson", rate=0.1 * rate, n=int(0.1 * N_FAIR),
+                 tenants=(mouse,), seed=SEED + 8, trace="uniform",
+                 lo=MOUSE_LO, hi=MOUSE_HI))
+    return (whale, mouse), stream
+
+
+def _paced(srv, stream, tenants, scheduler, admission, model,
+           accounting=None, passes: int = 2):
+    """Best-of-``passes`` paced run: an occasional host stall (GC, a
+    stray compile) tanks one replay's goodput; the best pass is the
+    machine's honest capability, same policy as ``autotune.replay``.
+    ``accounting`` is a zero-arg factory (each pass gets a fresh
+    ``TenantAccounting``); when given, returns (report, accounting) of
+    the winning pass."""
+    from repro.serving import TrafficFrontend
+
+    best = best_acct = None
+    for _ in range(max(passes, 1)):
+        acct = accounting() if accounting is not None else None
+        fe = TrafficFrontend(srv, tenants, slo_ms=SLO_MS,
+                             scheduler=scheduler, admission=admission,
+                             model=model, accounting=acct, seed=1)
+        rep = fe.run(stream, pace=True)
+        srv.stats.reset()
+        if best is None or rep.goodput_rps > best.goodput_rps:
+            best, best_acct = rep, acct
+    return (best, best_acct) if accounting is not None else best
+
+
+def _row(rep, **identity):
+    return {
+        **identity,
+        "requests": rep.requests,
+        "offered_rps": rep.offered_rps,
+        "goodput_rps": rep.goodput_rps,
+        "served_rps": rep.served_rps,
+        "shed_frac": rep.shed_frac,
+        "served": rep.served,
+        "degraded": rep.degraded,
+        "shed": rep.shed,
+        "worst_tenant_goodput_rps": rep.worst_tenant_goodput_rps,
+        "per_tenant": rep.per_tenant,
+    }
+
+
+def load_rows(srv, capacity, model):
+    from repro.serving import TenantSpec, generate
+
+    rows = []
+    for load in LOADS:
+        stream = generate("poisson", rate=capacity * load / 100.0,
+                          n=N_LOAD, tenants=(TenantSpec("t0"),),
+                          seed=SEED, trace="uniform", lo=LO, hi=HI)
+        for admission in ("shed", "none"):
+            rep = _paced(srv, stream, (TenantSpec("t0"),), "wfq",
+                         admission, model)
+            rows.append(_row(rep, suite="load", arrivals="poisson",
+                             scheduler="wfq", admission=admission,
+                             load_pct=load, slo_ms=SLO_MS))
+            emit(f"goodput_load{load}_{admission}",
+                 f"{rep.goodput_rps:.1f}",
+                 f"goodput_rps={rep.goodput_rps:.1f}"
+                 f";shed_frac={rep.shed_frac:.3f}")
+    return rows
+
+
+def fairness_rows(srv, capacity, model, metrics_out=None):
+    rows = []
+    tenants, stream = _whale_mouse(capacity)
+    for scheduler in ("wfq", "fifo"):
+        if metrics_out and scheduler == "wfq":
+            from repro.obs import TenantAccounting
+            rep, acct = _paced(srv, stream, tenants, scheduler, "shed",
+                               model, accounting=TenantAccounting)
+            import pathlib
+            acct.summary(span_s=max(rep.duration_s, 1e-9))
+            pathlib.Path(metrics_out).write_text(
+                acct.registry.to_prometheus())
+        else:
+            rep = _paced(srv, stream, tenants, scheduler, "shed", model)
+        rows.append(_row(rep, suite="fairness", arrivals="poisson",
+                         scheduler=scheduler, admission="shed",
+                         load_pct=250, slo_ms=SLO_MS,
+                         mouse_slo_ms=MOUSE_SLO_MS))
+        emit(f"goodput_fairness_{scheduler}",
+             f"{rep.worst_tenant_goodput_rps:.1f}",
+             f"worst_tenant_goodput_rps={rep.worst_tenant_goodput_rps:.1f}"
+             f";goodput_rps={rep.goodput_rps:.1f}")
+    return rows
+
+
+def run(fast: bool = True, metrics_out=None) -> None:
+    del fast                         # the sweep is seconds either way
+    srv = _server()
+    capacity, model = _calibrate(srv)
+    emit("goodput_capacity", f"{capacity:.0f}",
+         f"closed_loop_rps={capacity:.1f}")
+    rows = load_rows(srv, capacity, model)
+    rows += fairness_rows(srv, capacity, model, metrics_out=metrics_out)
+    emit_json("goodput", {
+        "capacity_rps": capacity,
+        "slo_ms": SLO_MS,
+        "mouse_slo_ms": MOUSE_SLO_MS,
+        "loads_pct": list(LOADS),
+        "rows": rows,
+    })
+
+
+def selftest() -> None:
+    """Deterministic virtual-clock checks -- the fast CI smoke.
+
+    Asserts: (1) a seeded open-loop run is bit-identical across two
+    invocations (admitted/shed split, outcomes, result bytes); (2) shed
+    accounting balances; (3) admission control beats unbounded queueing
+    on modeled goodput past saturation; (4) WFQ keeps the starved
+    tenant's p99 bounded where FIFO does not."""
+    from repro.core import PCAConfig
+    from repro.serving import (BucketPolicy, CostModel, PCAServer,
+                               TenantSpec, TrafficFrontend, VirtualClock,
+                               generate, merge)
+
+    whale = TenantSpec("whale")
+    mouse = TenantSpec("mouse", slo_ms=30.0)
+    stream = merge(
+        generate("poisson", rate=360.0, n=180, tenants=(whale,), seed=SEED,
+                 trace="uniform", lo=24, hi=40),
+        generate("poisson", rate=40.0, n=20, tenants=(mouse,),
+                 seed=SEED + 8, trace="uniform", lo=8, hi=12))
+    model = CostModel(device_work_per_s=2e6)   # modeled slow device
+
+    def one(scheduler, admission):
+        clk = VirtualClock()
+        srv = PCAServer(PCAConfig(T=T, S=BATCH, sweeps=SWEEPS),
+                        policy=BucketPolicy(T=T), clock=clk,
+                        max_delay_s=MAX_DELAY_S, max_batch=BATCH)
+        fe = TrafficFrontend(srv, (whale, mouse), slo_ms=100.0,
+                             scheduler=scheduler, admission=admission,
+                             model=model, seed=1)
+        return fe.run(stream, pace=False)
+
+    a, b = one("wfq", "shed"), one("wfq", "shed")
+    assert a.digest == b.digest, "seeded open-loop run not deterministic"
+    assert (a.served, a.degraded, a.shed, a.throttled) == \
+           (b.served, b.degraded, b.shed, b.throttled)
+    total = a.served + a.degraded + a.shed + a.throttled
+    assert total == a.requests == len(stream), \
+        f"shed accounting leak: {total} != {a.requests}"
+    assert a.shed > 0, "saturating stream shed nothing"
+    none = one("wfq", "none")
+    assert a.goodput_rps >= 1.3 * none.goodput_rps, \
+        (a.goodput_rps, none.goodput_rps)
+    fifo_none = one("fifo", "none")
+    wfq_p99 = none.per_tenant["mouse"]["latency_p99_ms"]
+    fifo_p99 = fifo_none.per_tenant["mouse"]["latency_p99_ms"]
+    assert wfq_p99 < 0.5 * fifo_p99, \
+        f"WFQ did not bound starved-tenant p99: {wfq_p99} vs {fifo_p99}"
+    print(f"goodput selftest ok: {a.requests} arrivals, "
+          f"{a.served} served / {a.shed} shed (deterministic), "
+          f"admission {a.goodput_rps / max(none.goodput_rps, 1e-9):.1f}x "
+          f"no-admission goodput, mouse p99 wfq {wfq_p99:.0f}ms "
+          f"vs fifo {fifo_p99:.0f}ms")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--selftest", action="store_true",
+                    help="fast deterministic checks, no BENCH emission")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the fairness run's tenant metrics "
+                         "(Prometheus text) here")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    if args.selftest:
+        selftest()
+        sys.exit(0)
+    print("name,us_per_call,derived")
+    run(fast=not args.full, metrics_out=args.metrics_out)

@@ -11,6 +11,7 @@ Prints ``name,us_per_call,derived`` CSV.
   serve -- batched multi-tenant serving throughput (repro.serving)
   autotune -- tuned-vs-default serving-plan gain (serving.autotune)
   cold_start -- fresh-replica TTFR: cold JIT vs warm disk cache vs warmup
+  goodput -- open-loop goodput-under-SLO vs offered load (serving.frontend)
 """
 import argparse
 import sys
@@ -26,7 +27,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import (autotune_gain, cold_start, dse, fig1_bottlenecks,
-                   fig6_exec_time, fig7_energy, fig8_frobenius,
+                   fig6_exec_time, fig7_energy, fig8_frobenius, goodput,
                    perf_variants, roofline, serve_throughput,
                    table3_configs)
     suite = {
@@ -41,6 +42,7 @@ def main() -> None:
         "serve": serve_throughput,
         "autotune": autotune_gain,
         "cold_start": cold_start,
+        "goodput": goodput,
     }
     only = set(args.only.split(",")) if args.only else None
     print("name,us_per_call,derived")

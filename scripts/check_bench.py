@@ -35,6 +35,14 @@ committed rows themselves must honor the invariant).
 ``--warmup``) must remove >= 80% of the cold row's time-to-first-response,
 minus tolerance slack -- a warm replica that still pays compile-scale
 first-request latency is a persistent-cache regression.
+``BENCH_goodput.json`` carries two ratio gates (machine-independent by
+construction): past saturation (load_pct > 100) the admission="shed" rows
+must hold >= 1.3x the admission="none" rows' goodput, and the WFQ fairness
+row's worst-tenant goodput must hold >= 2x the FIFO row's -- both with the
+tolerance as multiplicative slack.  Matched goodput rows additionally gate
+on ``shed_frac``: the shed fraction may not grow more than 5 percentage
+points (plus slack) over the committed row -- goodput held up by shedding
+ever more traffic is a capacity regression the rps diff alone can hide.
 
 A file whose content is byte-identical to HEAD was not re-emitted this run
 and is skipped for the row-vs-HEAD diff.  The tolerance (default 25% from
@@ -57,6 +65,7 @@ REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
 # (metric, higher_is_better) probed in order; first hit wins
 METRIC_PREFERENCE = (
     ("requests_per_s", True),
+    ("goodput_rps", True),
     ("us_per_request", False),
     ("ttfr_ms", False),
     ("mm_engine_us", False),
@@ -186,6 +195,68 @@ def cold_start_gate(name: str, doc: dict, tol: float) -> tuple[list, bool]:
     return [header] + lines, ok
 
 
+def goodput_gate(name: str, doc: dict, tol: float) -> tuple[list, bool]:
+    """Intra-file invariants for BENCH_goodput.json, both dimensionless
+    ratios so they mean the same thing on any host:
+
+      admission   past saturation (load_pct > 100) the admission="shed"
+                  row must hold >= 1.3x the admission="none" row's
+                  goodput at the same load -- admission control that no
+                  longer beats unbounded queueing is dead weight.
+      fairness    the WFQ row's worst-tenant goodput must hold >= 2x the
+                  FIFO row's -- the whole point of per-tenant weighted
+                  backlogs is that the mouse survives the whale.
+
+    The tolerance is multiplicative slack on both thresholds."""
+    rows = [r for _, r in iter_rows(doc)
+            if isinstance(r.get("goodput_rps"), (int, float))]
+    lines, ok = [], True
+
+    by_load = {}
+    for r in rows:
+        if r.get("suite") == "load" and isinstance(r.get("load_pct"), int):
+            by_load.setdefault(r["load_pct"], {})[r.get("admission")] = r
+    checked = 0
+    for load in sorted(by_load):
+        pair = by_load[load]
+        if load <= 100 or "shed" not in pair or "none" not in pair:
+            continue
+        checked += 1
+        shed = float(pair["shed"]["goodput_rps"])
+        none = float(pair["none"]["goodput_rps"])
+        floor = 1.3 * (1.0 - tol)
+        ratio = shed / none if none > 0 else float("inf")
+        verdict = "ok"
+        if ratio < floor:
+            verdict, ok = "NO-ADMISSION-WIN", False
+        lines.append(f"  {verdict:<16} load[{load}%] shed {shed:.1f} vs "
+                     f"none {none:.1f} rps ({ratio:.2f}x, floor "
+                     f"{floor:.2f}x)")
+
+    fair = {r.get("scheduler"): r for r in rows
+            if r.get("suite") == "fairness"}
+    if "wfq" in fair and "fifo" in fair and all(
+            isinstance(fair[s].get("worst_tenant_goodput_rps"),
+                       (int, float)) for s in ("wfq", "fifo")):
+        checked += 1
+        wfq = float(fair["wfq"]["worst_tenant_goodput_rps"])
+        fifo = float(fair["fifo"]["worst_tenant_goodput_rps"])
+        floor = 2.0 * (1.0 - tol)
+        ratio = wfq / fifo if fifo > 0 else float("inf")
+        verdict = "ok"
+        if ratio < floor:
+            verdict, ok = "UNFAIR", False
+        lines.append(f"  {verdict:<16} fairness wfq worst-tenant "
+                     f"{wfq:.1f} vs fifo {fifo:.1f} rps ({ratio:.2f}x, "
+                     f"floor {floor:.2f}x)")
+
+    if not checked:
+        return [f"{name}: no gateable rows; goodput gate skipped"], True
+    header = (f"{name}: goodput gate (shed >= 1.3x none past saturation; "
+              f"wfq worst-tenant >= 2x fifo; {tol * 100:.0f}% slack)")
+    return [header] + lines, ok
+
+
 def compare_file(name: str, tol: float) -> tuple[list, bool]:
     """Returns (report lines, ok)."""
     fresh_path = REPO_ROOT / name
@@ -202,6 +273,9 @@ def compare_file(name: str, tol: float) -> tuple[list, bool]:
     elif name == "BENCH_cold_start.json":
         extra_lines, extra_ok = cold_start_gate(name,
                                                 json.loads(fresh_text), tol)
+    elif name == "BENCH_goodput.json":
+        extra_lines, extra_ok = goodput_gate(name, json.loads(fresh_text),
+                                             tol)
     base_text = committed_copy(name)
     if base_text is None:
         return ([f"{name}: not in HEAD (new benchmark); diff skipped"]
@@ -264,6 +338,19 @@ def compare_docs(name: str, base_doc: dict, fresh_doc: dict,
         lines.append(
             f"  {verdict:<10} {section}[{ident}] {mname}: "
             f"{base_v:.1f} -> {fresh_v:.1f} ({delta * 100:+.1f}%)")
+        # shed_frac band: goodput held up by shedding ever more traffic is
+        # a capacity regression the rps diff alone can hide
+        if isinstance(row.get("shed_frac"), (int, float)) and isinstance(
+                base.get("shed_frac"), (int, float)):
+            grew = float(row["shed_frac"]) - float(base["shed_frac"])
+            band = 0.05 + 0.2 * tol
+            if grew > band:
+                ok = False
+                lines.append(
+                    f"  SHED-GREW  {section}[{ident}] shed_frac: "
+                    f"{float(base['shed_frac']):.3f} -> "
+                    f"{float(row['shed_frac']):.3f} "
+                    f"(+{grew * 100:.1f}pp > {band * 100:.1f}pp band)")
     for (section, key), _ in sorted(base_rows.items()):
         ident = ", ".join(f"{k}={v}" for k, v in key) or "<no id>"
         lines.append(f"  MISSING {section}[{ident}] (not emitted this run)")

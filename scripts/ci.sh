@@ -22,10 +22,16 @@
 #      schema-valid Chrome trace (request->flush parentage checked by
 #      repro.obs.validate_trace) and Prometheus metrics carrying the
 #      per-(op, bucket, backend) latency histograms and SLO counters
-#   5. perf-regression gate -- re-emit BENCH_serve_throughput.json and diff
+#   5. frontend smoke       -- the open-loop traffic frontend's
+#      deterministic virtual-clock checks: a seeded Poisson run is
+#      bit-identical across invocations, shed accounting balances,
+#      admission beats unbounded queueing past saturation, and WFQ
+#      bounds the starved tenant's p99 where FIFO does not; runs in
+#      both matrix jobs
+#   6. perf-regression gate -- re-emit BENCH_serve_throughput.json and diff
 #      it against the committed copy (scripts/check_bench.py; fails on
 #      >25% throughput regression).  Runs regardless of --slow.
-#   6. tier-1 tests         -- fast tier by default (pytest.ini deselects
+#   7. tier-1 tests         -- fast tier by default (pytest.ini deselects
 #      `slow`); MUST be zero failures, enforced by the pytest exit code
 #      under `set -e`.  `scripts/ci.sh --slow` appends the slow tier.
 set -euo pipefail
@@ -85,6 +91,9 @@ print(f"observability smoke ok: {len(xs)} spans, "
       f"{len(requests)} request spans, "
       f"goodput {slo['goodput_rps']:.1f} rps @ {slo['slo_ms']:.0f}ms SLO")
 EOF
+
+echo "== frontend smoke (goodput --selftest) =="
+python -m benchmarks.goodput --selftest
 
 echo "== perf-regression gate (serve_throughput + check_bench) =="
 # single-device regime only: grid rows from a multi-device process carry a

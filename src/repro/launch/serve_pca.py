@@ -33,13 +33,23 @@ trace):
   PYTHONPATH=src python -m repro.launch.serve_pca --slo-ms 50 \
       --trace-out /tmp/trace.json --metrics-out /tmp/metrics.prom
 
+Open-loop traffic (continuous seeded arrivals through the fairness /
+admission frontend instead of the closed-loop burst; requests land on
+their own schedule and the report is goodput under the SLO, per tenant):
+  PYTHONPATH=src python -m repro.launch.serve_pca --arrivals poisson \
+      --rate 200 --requests 256 --tenants "whale:0.9,mouse:0.1" \
+      --scheduler wfq --admission shed --slo-ms 50
+
 CI smoke (exercises submit/flush/cache + checks results against numpy;
 includes a sharded-flush parity leg over every visible device, an
 async-pipeline leg -- a mixed burst must match the synchronous engine
 bit-for-bit while the in-flight depth telemetry shows real pipelining --
 and an autotune leg: the tuned plan must serve the same burst bit-identical
 to the default plan, and a mid-stream ``apply_plan`` hot-swap must be
-bit-identical to a cold server built with the plan):
+bit-identical to a cold server built with the plan; plus a frontend leg:
+a seeded open-loop run under a virtual clock must be bit-identical across
+two invocations -- same admitted/shed split, same result bytes -- and WFQ
+must bound the starved tenant's p99 where FIFO does not):
   PYTHONPATH=src python -m repro.launch.serve_pca --selftest
 """
 from __future__ import annotations
@@ -54,9 +64,12 @@ import numpy as np
 from repro.core import PCAConfig
 from repro.core.memory_model import VIRTEX_US
 from repro.obs import Observability, device_profile, validate_trace
-from repro.serving import (BucketPolicy, PCAServer, POLICIES, TrafficProfile,
-                           aot_supported, autotune, mesh_executor, plan_grid,
-                           server_for_plan)
+from repro.serving import (ADMISSION_MODES, ARRIVALS, BucketPolicy,
+                           CostModel, PCAServer, POLICIES, SCHEDULERS,
+                           TenantSpec, TrafficFrontend, TrafficProfile,
+                           VirtualClock, aot_supported, autotune, generate,
+                           materialize, merge, mesh_executor, parse_tenants,
+                           plan_grid, profile_of, server_for_plan)
 from repro.serving.autotune import synthesize
 
 
@@ -250,6 +263,42 @@ def selftest() -> int:
                          "disk_hits": warmed["disk"],
                          "warmup_s": round(warmed["seconds"], 4)}
 
+    # frontend leg: the open-loop path must be *reproducible* -- a seeded
+    # arrival stream through admission + WFQ under a virtual clock gives
+    # the same admitted/shed split and the same result bytes on every
+    # invocation -- and *fair*: with a whale saturating the server, WFQ
+    # keeps the mouse's p99 bounded (its queue drains at its weight share)
+    # while FIFO parks the mouse behind the whale's whole backlog
+    whale = TenantSpec("whale")
+    mouse = TenantSpec("mouse", slo_ms=30.0)
+    stream = merge(
+        generate("poisson", rate=240.0, n=120, tenants=(whale,), seed=3,
+                 trace="uniform", lo=24, hi=40),
+        generate("poisson", rate=30.0, n=15, tenants=(mouse,), seed=11,
+                 trace="uniform", lo=8, hi=12))
+    fe_model = CostModel(device_work_per_s=2e6)   # modeled slow device
+
+    def open_loop(scheduler, admission):
+        fsrv = PCAServer(PCAConfig(T=16, S=8, sweeps=6),
+                         policy=BucketPolicy(T=16), clock=VirtualClock(),
+                         max_delay_s=0.02, max_batch=8)
+        fe = TrafficFrontend(fsrv, (whale, mouse), slo_ms=100.0,
+                             scheduler=scheduler, admission=admission,
+                             model=fe_model, seed=1)
+        return fe.run(stream, pace=False)
+
+    rep_a, rep_b = open_loop("wfq", "shed"), open_loop("wfq", "shed")
+    assert rep_a.digest == rep_b.digest, "open-loop run not deterministic"
+    assert rep_a.outcomes == rep_b.outcomes
+    assert rep_a.shed > 0 and rep_a.served > 0, rep_a.to_json()
+    assert (rep_a.served + rep_a.degraded + rep_a.shed + rep_a.throttled
+            == rep_a.requests == len(stream))
+    wfq_rep, fifo_rep = open_loop("wfq", "none"), open_loop("fifo", "none")
+    wfq_p99 = wfq_rep.per_tenant["mouse"]["latency_p99_ms"]
+    fifo_p99 = fifo_rep.per_tenant["mouse"]["latency_p99_ms"]
+    assert wfq_p99 < 0.5 * fifo_p99, \
+        f"WFQ did not bound the starved tenant: {wfq_p99} vs {fifo_p99}"
+
     print("serve_pca selftest ok:",
           json.dumps({k: round(v, 4) for k, v in summary.items()}))
     print("serve_pca sharded selftest ok:", json.dumps({
@@ -267,6 +316,72 @@ def selftest() -> int:
         "request_spans": len(requests),
         "goodput_rps": round(slo["goodput_rps"], 2)}))
     print("serve_pca cold-start selftest ok:", json.dumps(cold_info))
+    print("serve_pca frontend selftest ok:", json.dumps({
+        "requests": rep_a.requests, "served": rep_a.served,
+        "shed": rep_a.shed, "digest": rep_a.digest[:12],
+        "mouse_p99_ms": {"wfq": round(wfq_p99, 1),
+                         "fifo": round(fifo_p99, 1)}}))
+    return 0
+
+
+def open_loop_run(args, srv, obs, dims) -> int:
+    """Open-loop mode: seeded paced arrivals through the traffic frontend
+    (fairness + admission) instead of the closed-loop burst."""
+    tenants = parse_tenants(args.tenants)
+    stream = generate(args.arrivals, rate=args.rate, n=args.requests,
+                      tenants=tenants, seed=args.seed, trace="uniform",
+                      op=args.op, lo=min(dims), hi=max(dims))
+    # the offered-load profile of this exact stream -- arrival rate
+    # included, so plan_grid scores candidates against real load pressure
+    profile = profile_of(stream)
+    if args.profile_out:
+        profile.save(args.profile_out)
+    # warm every bucket the stream will touch, then calibrate the
+    # admission model from that pass's telemetry: service predictions
+    # come from the hardware they will gate
+    seen, sample = set(), []
+    for a in stream:
+        if a.shape not in seen:
+            seen.add(a.shape)
+            sample.append(materialize(a, seed=args.seed))
+    srv.solve_many(sample * max(1, args.max_batch), op=args.op)
+    model = CostModel.calibrated(TrafficProfile.from_stats(srv.stats))
+    srv.stats.reset()
+    accounting = None
+    if obs is not None:
+        from repro.obs import TenantAccounting
+        accounting = TenantAccounting(obs.metrics, clock=obs.clock)
+        obs.tracer.clear()
+        if obs.slo is not None:
+            obs.slo.reset()
+    fe = TrafficFrontend(srv, tenants, slo_ms=args.slo_ms,
+                         scheduler=args.scheduler, admission=args.admission,
+                         model=model, degrade_frac=args.degrade_frac,
+                         accounting=accounting, seed=args.seed)
+    rep = fe.run(stream, pace=True)
+    obs_info = None
+    if obs is not None:
+        accounting.summary(span_s=rep.duration_s)  # refresh goodput gauges
+        obs_info = obs.summary()
+        if args.trace_out:
+            obs_info["trace_out"] = str(obs.save_trace(args.trace_out))
+        if args.metrics_out:
+            obs_info["metrics_out"] = str(obs.save_metrics(args.metrics_out))
+    print(json.dumps({
+        "op": args.op,
+        "arrivals": args.arrivals,
+        "rate_rps": args.rate,
+        "tenants": [dataclasses.asdict(t) for t in tenants],
+        "scheduler": args.scheduler,
+        "admission": args.admission,
+        "slo_ms": args.slo_ms,
+        "plan": srv.describe_plan(),
+        "profile": {"requests": profile.requests,
+                    "arrival_rate": profile.arrival_rate,
+                    "duration_s": profile.duration_s},
+        "frontend": rep.to_json(),
+        "obs": obs_info,
+    }, indent=2))
     return 0
 
 
@@ -341,6 +456,29 @@ def main(argv=None) -> int:
                          "request is accepted; pairs with --cache-dir so "
                          "the warmup is a disk load on every replica after "
                          "the first")
+    ap.add_argument("--arrivals", default=None, choices=ARRIVALS,
+                    help="open-loop mode: drive the server with this "
+                         "seeded arrival process (continuous paced "
+                         "traffic through the fairness/admission "
+                         "frontend) instead of the closed-loop burst; "
+                         "reports goodput under --slo-ms per tenant")
+    ap.add_argument("--rate", type=float, default=100.0,
+                    help="open-loop mean offered load, requests/s")
+    ap.add_argument("--tenants", default="t0",
+                    help="tenant spec, comma-separated "
+                         "name[:share[:weight]][:p] -- e.g. "
+                         "'whale:0.9,mouse:0.1' or 'rt:0.2:1:p,batch:0.8'")
+    ap.add_argument("--scheduler", default="wfq", choices=SCHEDULERS,
+                    help="cross-tenant scheduling discipline ahead of "
+                         "the engine (wfq: weighted virtual-finish-time "
+                         "fairness; fifo: arrival order)")
+    ap.add_argument("--admission", default="shed", choices=ADMISSION_MODES,
+                    help="deadline-feasibility policy at ingress: none "
+                         "(queue unboundedly), shed (reject infeasible "
+                         "requests), degrade (retry the feasibility "
+                         "check at --degrade-frac sweeps first)")
+    ap.add_argument("--degrade-frac", type=float, default=0.5,
+                    help="sweeps fraction of the degraded variant")
     ap.add_argument("--jax-profile", default=None,
                     help="directory for a jax.profiler device trace "
                          "around the timed pass (TensorBoard/"
@@ -368,6 +506,8 @@ def main(argv=None) -> int:
                     obs=obs,
                     cache_dir=args.cache_dir,
                     **({"clock": obs.clock} if obs is not None else {}))
+    if args.arrivals:
+        return open_loop_run(args, srv, obs, dims)
     warmup_info = None
     if args.warmup:
         # pre-build the profile's executables before the first request --

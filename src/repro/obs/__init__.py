@@ -34,6 +34,7 @@ from typing import Dict, Optional
 from .metrics import (DEFAULT_BUCKETS, Counter, Family, Gauge, Histogram,
                       MetricRegistry, fmt_label, histogram_quantile)
 from .slo import SLORecord, SLOTracker, from_records as slo_from_records
+from .tenants import OUTCOMES as TENANT_OUTCOMES, TenantAccounting
 from .tracing import Span, Tracer, device_profile, validate_trace
 
 
@@ -117,6 +118,7 @@ class Observability:
 __all__ = [
     "Counter", "DEFAULT_BUCKETS", "Family", "Gauge", "Histogram",
     "MetricRegistry", "Observability", "SLORecord", "SLOTracker", "Span",
+    "TENANT_OUTCOMES", "TenantAccounting",
     "Tracer", "backend_resolution_collector", "device_profile", "fmt_label",
     "histogram_quantile", "slo_from_records", "validate_trace",
 ]

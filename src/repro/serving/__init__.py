@@ -31,6 +31,12 @@ from .cache import (DiskCache, ExecutableCache, LRUCache, SolverKey,
                     aot_supported, content_hash, environment_fingerprint)
 from .engine import (BackendRouter, OPS, PCAServer, ServedEigh, ServedPCA,
                      ServedSVD, Ticket, threshold_router)
+from .frontend import (ADMISSION_MODES, ARRIVALS, AdmissionController,
+                       AdmissionDecision, Arrival, FairQueue,
+                       FrontendReport, SCHEDULERS, TenantSpec, TokenBucket,
+                       TrafficFrontend, VirtualClock, arrival_times,
+                       generate, materialize, merge, parse_tenants,
+                       profile_of)
 from .inflight import InFlightFlush, InFlightQueue
 from .sharded import LocalExecutor, MeshExecutor, host_mesh, mesh_executor
 from .solver import (BatchedEighResult, BatchedPCAResult, BatchedSVDResult,
@@ -40,6 +46,11 @@ from .solver import (BatchedEighResult, BatchedPCAResult, BatchedSVDResult,
 from .stats import FlushRecord, RequestRecord, ServingStats, percentile
 
 __all__ = [
+    "ADMISSION_MODES", "ARRIVALS", "AdmissionController",
+    "AdmissionDecision", "Arrival", "FairQueue", "FrontendReport",
+    "SCHEDULERS", "TenantSpec", "TokenBucket", "TrafficFrontend",
+    "VirtualClock", "arrival_times", "generate", "materialize", "merge",
+    "parse_tenants", "profile_of",
     "AutotuneResult", "BackendRouter", "BatchedEighResult",
     "BatchedPCAResult", "BatchedSVDResult", "BucketPolicy", "CostModel",
     "DiskCache", "ExecutableCache", "FlushRecord", "InFlightFlush",

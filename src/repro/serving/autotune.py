@@ -358,6 +358,23 @@ class CostModel:
     host_s_per_request: float = 3.0e-5
     compile_s_per_executable: float = 0.25
 
+    def request_service_s(self, op: str, bucket: Sequence[int],
+                          batch: int = 1,
+                          sweeps_frac: float = 1.0) -> float:
+        """Predicted seconds to serve one request of (op, bucket).
+
+        The admission-control primitive: device work for the padded
+        problem (scaled by ``sweeps_frac`` -- the degrade path trades
+        Jacobi sweeps for time) plus the per-request share of one flush's
+        host cost.  ``batch`` amortizes the flush overhead the way the
+        serving engine actually does.
+        """
+        batch = max(int(batch), 1)
+        dev = solve_work(op, bucket) * max(sweeps_frac, 0.0) \
+            / self.device_work_per_s
+        host = self.host_s_per_flush / batch + self.host_s_per_request
+        return dev + host
+
     @classmethod
     def calibrated(cls, profile: TrafficProfile) -> "CostModel":
         """Constants from the profile's own telemetry where available."""
@@ -416,7 +433,18 @@ class CostModel:
             host_s += flushes * host_flush
             hidden_s += flushes * occupancy * min(host_flush, dev_flush)
         compile_s = n_exec * self.compile_s_per_executable
-        total_s = max(device_s + host_s - hidden_s + compile_s, 1e-12)
+        # deadline term: when the profile measured an arrival rate, a plan
+        # slower than the offered load queues unboundedly -- every second
+        # of predicted service beyond the offered span is a second of
+        # backlog at the end of the window, charged at face value so
+        # plans that keep up dominate plans that almost keep up.
+        overload_s = 0.0
+        if profile.arrival_rate > 0 and profile.requests > 0:
+            offered_span = profile.requests / profile.arrival_rate
+            serve_s = device_s + host_s - hidden_s
+            overload_s = max(0.0, serve_s - offered_span)
+        total_s = max(device_s + host_s - hidden_s + compile_s
+                      + overload_s, 1e-12)
         requests = max(profile.requests, 1)
         return {
             "total_s": total_s,
@@ -424,6 +452,7 @@ class CostModel:
             "host_s": host_s,
             "hidden_s": hidden_s,
             "compile_s": compile_s,
+            "overload_s": overload_s,
             "n_buckets": float(len(per_bucket)),
             "n_executables": float(n_exec),
             "est_padding_waste": waste_num / requests,

@@ -128,14 +128,15 @@ class Ticket:
     makes progress.
     """
 
-    __slots__ = ("rid", "op", "shape", "bucket", "record", "_result",
-                 "_done", "_flush", "_server")
+    __slots__ = ("rid", "op", "shape", "bucket", "sweeps", "record",
+                 "_result", "_done", "_flush", "_server")
 
-    def __init__(self, rid: int, op: str, shape, bucket):
+    def __init__(self, rid: int, op: str, shape, bucket, sweeps: int = 0):
         self.rid = rid
         self.op = op
         self.shape = shape
         self.bucket = bucket
+        self.sweeps = sweeps
         self.record: Optional[RequestRecord] = None
         self._result = None
         self._done = False
@@ -157,7 +158,8 @@ class Ticket:
         if not self._done:
             flush = self._flush
             if flush is None:
-                depth = (self._server._queue_depth(self.op, self.bucket)
+                depth = (self._server._queue_depth(self.op, self.bucket,
+                                                   self.sweeps)
                          if self._server is not None else 0)
                 raise RuntimeError(
                     f"request {self.rid} (op={self.op!r}, bucket "
@@ -183,7 +185,7 @@ class Ticket:
             if self._server is None:
                 raise RuntimeError(
                     f"request {self.rid} is not attached to a server")
-            self._server._dispatch_key((self.op, self.bucket))
+            self._server._dispatch_key((self.op, self.bucket, self.sweeps))
         if self._done:  # dispatch back-pressure may already have retired us
             return self._result
         if timeout is not None:
@@ -355,7 +357,14 @@ class PCAServer:
 
     # -- request path -------------------------------------------------------
     def submit(self, matrix, op: str = "eigh",
-               max_delay_s: Optional[float] = None) -> Ticket:
+               max_delay_s: Optional[float] = None,
+               sweeps: Optional[int] = None) -> Ticket:
+        """Queue one request.  ``sweeps`` overrides the config's Jacobi
+        sweep count for this request only -- the admission-control degrade
+        path (``serving.frontend``) trades accuracy for latency by
+        submitting with fewer sweeps.  Requests with different sweep
+        counts batch separately (they need different executables, keyed by
+        their relaxed ``SolverKey``)."""
         if op not in OPS:
             raise ValueError(f"unknown op {op!r}; expected one of {OPS}")
         matrix = np.asarray(matrix, np.float32)
@@ -363,16 +372,19 @@ class PCAServer:
             raise ValueError(f"expected a 2-D matrix, got shape {matrix.shape}")
         if op == "eigh" and matrix.shape[0] != matrix.shape[1]:
             raise ValueError(f"eigh needs a square matrix, got {matrix.shape}")
+        sweeps = self.config.sweeps if sweeps is None else int(sweeps)
+        if sweeps < 1:
+            raise ValueError(f"sweeps must be >= 1, got {sweeps}")
         now = self.clock()
         bucket = self.policy.bucket_shape(matrix.shape)
         rid = next(self._rid)
-        ticket = Ticket(rid, op, matrix.shape, bucket)
+        ticket = Ticket(rid, op, matrix.shape, bucket, sweeps)
         ticket._server = self
         delay = self.max_delay_s if max_delay_s is None else max_delay_s
         if self.obs is not None:
             self._m_submitted.labels(op=op).inc(now=now)
-        self._enqueue((op, bucket), _Pending(rid, matrix, ticket, now,
-                                             now + delay), now)
+        self._enqueue((op, bucket, sweeps),
+                      _Pending(rid, matrix, ticket, now, now + delay), now)
         return ticket
 
     def _enqueue(self, key: Tuple, entry: "_Pending", now: float) -> None:
@@ -534,7 +546,7 @@ class PCAServer:
         for e in queued:
             bucket = self.policy.bucket_shape(e.matrix.shape)
             e.ticket.bucket = bucket
-            self._enqueue((e.ticket.op, bucket), e, now)
+            self._enqueue((e.ticket.op, bucket, e.ticket.sweeps), e, now)
         return switch
 
     # -- dispatch stage -----------------------------------------------------
@@ -548,7 +560,7 @@ class PCAServer:
         here -- exactly the old synchronous flush.  Returns the number of
         requests retired while enforcing the cap.
         """
-        op, bucket = key
+        op, bucket, sweeps = key
         queue = self._queues.pop(key, [])
         if not queue:
             return 0
@@ -573,7 +585,7 @@ class PCAServer:
             # is recorded at retire time, when its end is known
             flush_span = obs.tracer.new_id()
             t0 = self.clock()
-            fn, source = self._executable(op, bucket, bp, backend)
+            fn, source = self._executable(op, bucket, bp, backend, sweeps)
             if source != "memory":
                 # the executable *build*: a jit-wrapper construction on the
                 # memory-only path (XLA itself compiles lazily inside the
@@ -586,7 +598,7 @@ class PCAServer:
                     track="flushes", parent=flush_span, op=op,
                     bucket=list(bucket), batch=bp, backend=str(backend))
         else:
-            fn, source = self._executable(op, bucket, bp, backend)
+            fn, source = self._executable(op, bucket, bp, backend, sweeps)
         hit = source != "compile"
         flush = self.executor.submit(fn, batch, n_active)
         flush.seq = next(self._seq)
@@ -630,7 +642,7 @@ class PCAServer:
         """
         if flush.retired:
             return 0
-        op, bucket = flush.key
+        op, bucket, sweeps = flush.key
         t_wait = self.clock()
         out = flush.result()
         t_retire = self.clock()
@@ -653,7 +665,7 @@ class PCAServer:
                 backend=flush.backend, n_shards=flush.n_shards,
                 t_dispatch=flush.t_dispatch,
                 inflight_depth=flush.inflight_depth,
-                deadline=e.flush_by)
+                deadline=e.flush_by, sweeps=sweeps)
             e.ticket._fulfil(self._unpack(op, out, i, e.matrix.shape), rec)
             self.stats.record_request(rec)
             records.append(rec)
@@ -672,7 +684,7 @@ class PCAServer:
         """
         obs = self.obs
         tr = obs.tracer
-        op, bucket = flush.key
+        op, bucket, _sweeps = flush.key
         backend, exec_label = flush.backend, self._exec_label
         t_end = self.clock()
         fid = flush.span_id if flush.span_id is not None else tr.new_id()
@@ -712,8 +724,9 @@ class PCAServer:
                             t_done=t_end, t_submit=rec.t_submit,
                             deadline=rec.deadline)
 
-    def _queue_depth(self, op: str, bucket: Tuple[int, ...]) -> int:
-        return len(self._queues.get((op, bucket), ()))
+    def _queue_depth(self, op: str, bucket: Tuple[int, ...],
+                     sweeps: int) -> int:
+        return len(self._queues.get((op, bucket, sweeps), ()))
 
     def backend_for(self, op: str, bucket: Tuple[int, ...]) -> Optional[str]:
         """The kernel backend this (op, bucket) routes to."""
@@ -722,13 +735,16 @@ class PCAServer:
         return self.config.backend
 
     def _executable(self, op: str, bucket: Tuple[int, ...], batch: int,
-                    backend: Optional[str]) -> Tuple[Callable, str]:
+                    backend: Optional[str],
+                    sweeps: Optional[int] = None) -> Tuple[Callable, str]:
         return self._executable_for(op, bucket, batch, backend,
-                                    self.config, self.executor)
+                                    self.config, self.executor,
+                                    sweeps=sweeps)
 
     def _executable_for(self, op: str, bucket: Tuple[int, ...], batch: int,
                         backend: Optional[str], config: PCAConfig,
-                        executor: LocalExecutor) -> Tuple[Callable, str]:
+                        executor: LocalExecutor,
+                        sweeps: Optional[int] = None) -> Tuple[Callable, str]:
         """Two-tier executable lookup under explicit plan facts.
 
         Returns (fn, source) with source one of ``"memory"`` (steady
@@ -741,7 +757,9 @@ class PCAServer:
         The explicit (config, executor) arguments let ``apply_plan``
         pre-warm an *incoming* plan's executables before the swap.
         """
-        cfg = dataclasses.replace(config, backend=backend)
+        cfg = dataclasses.replace(
+            config, backend=backend,
+            sweeps=config.sweeps if sweeps is None else sweeps)
         key = (op, bucket, batch, SolverKey.from_config(cfg),
                executor.cache_token())
         fn, source = self._cache.lookup(key)

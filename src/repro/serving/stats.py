@@ -38,6 +38,8 @@ class RequestRecord:
                                # (1 = synchronous engine)
     deadline: float = float("inf")  # flush-by time (submit + max_delay);
                                     # inf = no deadline was tracked
+    sweeps: Optional[int] = None    # Jacobi sweeps the request ran with
+                                    # (None = pre-degrade-path record)
 
     @property
     def latency_s(self) -> float:

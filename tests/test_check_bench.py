@@ -211,6 +211,104 @@ def test_ttfr_rows_gate_lower_is_better():
 
 
 # ---------------------------------------------------------------------------
+# the intra-file goodput gate (BENCH_goodput.json) + the shed_frac band
+# ---------------------------------------------------------------------------
+
+def _goodput_doc(loads, fairness):
+    """loads: {load_pct: (shed_rps, none_rps)};
+    fairness: (wfq_worst, fifo_worst) or None."""
+    rows = []
+    for load, (shed, none) in sorted(loads.items()):
+        rows.append({"suite": "load", "admission": "shed",
+                     "load_pct": load, "goodput_rps": shed})
+        rows.append({"suite": "load", "admission": "none",
+                     "load_pct": load, "goodput_rps": none})
+    if fairness is not None:
+        wfq, fifo = fairness
+        rows.append({"suite": "fairness", "scheduler": "wfq",
+                     "goodput_rps": 300.0,
+                     "worst_tenant_goodput_rps": wfq})
+        rows.append({"suite": "fairness", "scheduler": "fifo",
+                     "goodput_rps": 300.0,
+                     "worst_tenant_goodput_rps": fifo})
+    return _doc(rows)
+
+
+def test_goodput_gate_healthy_rows_pass():
+    doc = _goodput_doc({60: (230.0, 235.0), 150: (360.0, 220.0),
+                        250: (380.0, 120.0)}, fairness=(16.0, 4.0))
+    lines, ok = check_bench.goodput_gate("g.json", doc, tol=0.25)
+    assert ok
+    # sub-saturation pairs are exempt: shed ~ none there by design
+    assert not any("load[60%]" in ln for ln in lines)
+    assert any("load[150%]" in ln for ln in lines)
+    assert any("fairness" in ln for ln in lines)
+
+
+def test_goodput_gate_admission_not_winning_fails():
+    """Past saturation, admission must beat unbounded queueing by 1.3x
+    (minus slack; 0.975x at tol 0.25) -- a shed row that *loses* to the
+    none row fails."""
+    doc = _goodput_doc({250: (110.0, 120.0)}, fairness=None)
+    lines, ok = check_bench.goodput_gate("g.json", doc, tol=0.25)
+    assert not ok
+    assert any("NO-ADMISSION-WIN" in ln for ln in lines)
+
+
+def test_goodput_gate_admission_within_slack_passes():
+    """1.3x floor with tol 0.25 as multiplicative slack -> 0.975x floor:
+    a near-tie passes, leaving headroom for noisy hosts."""
+    doc = _goodput_doc({150: (118.0, 120.0)}, fairness=None)
+    lines, ok = check_bench.goodput_gate("g.json", doc, tol=0.25)
+    assert ok
+
+
+def test_goodput_gate_unfair_wfq_fails():
+    doc = _goodput_doc({}, fairness=(5.0, 4.0))
+    lines, ok = check_bench.goodput_gate("g.json", doc, tol=0.25)
+    assert not ok
+    assert any("UNFAIR" in ln for ln in lines)
+
+
+def test_goodput_gate_without_rows_skips():
+    lines, ok = check_bench.goodput_gate("g.json", _doc([]), tol=0.25)
+    assert ok and any("skipped" in ln for ln in lines)
+
+
+def test_goodput_rows_gate_higher_is_better():
+    base = _doc([{"suite": "load", "admission": "shed", "load_pct": 150,
+                  "goodput_rps": 360.0}])
+    fresh = _doc([{"suite": "load", "admission": "shed", "load_pct": 150,
+                   "goodput_rps": 100.0}])
+    lines, ok = check_bench.compare_docs("g.json", base, fresh, tol=0.25)
+    assert not ok and any("REGRESSION" in ln for ln in lines)
+
+
+def test_shed_frac_band_growth_beyond_5pp_fails():
+    """Goodput can hold steady while the server sheds ever more traffic;
+    the shed_frac band catches that even when the rps diff passes."""
+    base = _doc([{"suite": "load", "admission": "shed", "load_pct": 150,
+                  "goodput_rps": 360.0, "shed_frac": 0.19}])
+    fresh = _doc([{"suite": "load", "admission": "shed", "load_pct": 150,
+                   "goodput_rps": 360.0, "shed_frac": 0.40}])
+    lines, ok = check_bench.compare_docs("g.json", base, fresh, tol=0.25)
+    assert not ok
+    assert any("SHED-GREW" in ln for ln in lines)
+
+
+def test_shed_frac_band_small_growth_and_shrink_pass():
+    base = _doc([{"suite": "load", "admission": "shed", "load_pct": 150,
+                  "goodput_rps": 360.0, "shed_frac": 0.19}])
+    for frac in (0.22, 0.05):       # +3pp and a shrink both pass
+        fresh = _doc([{"suite": "load", "admission": "shed",
+                       "load_pct": 150, "goodput_rps": 360.0,
+                       "shed_frac": frac}])
+        lines, ok = check_bench.compare_docs("g.json", base, fresh,
+                                             tol=0.25)
+        assert ok, frac
+
+
+# ---------------------------------------------------------------------------
 # provenance metadata (benchmarks/common.emit_json stamps it; the gate
 # must ignore it)
 # ---------------------------------------------------------------------------

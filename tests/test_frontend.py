@@ -1,0 +1,390 @@
+"""Open-loop traffic frontend: seeded arrival generators (determinism,
+rate, process shape), token-bucket quotas, WFQ virtual-finish-time
+scheduling with a priority lane, admission control (shed / degrade -- the
+degraded request runs the *same* relaxed ``SolverKey`` executable a server
+configured at the reduced sweep count would build), the bit-deterministic
+virtual-clock run, and the tenant-labeled metric families."""
+import numpy as np
+import pytest
+
+from repro.core import PCAConfig
+from repro.obs import MetricRegistry, TenantAccounting
+from repro.serving import (AdmissionController, BucketPolicy, CostModel,
+                           FairQueue, PCAServer, TenantSpec, TokenBucket,
+                           TrafficFrontend, VirtualClock, arrival_times,
+                           generate, materialize, merge, parse_tenants,
+                           profile_of)
+
+
+def _server(clock=None, sweeps=6, **kw):
+    kw.setdefault("config", PCAConfig(T=8, S=4, sweeps=sweeps))
+    kw.setdefault("policy", BucketPolicy(T=8))
+    kw.setdefault("max_delay_s", 0.01)
+    if clock is not None:
+        kw["clock"] = clock
+    return PCAServer(**kw)
+
+
+# ---------------------------------------------------------------------------
+# arrival processes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["poisson", "diurnal", "bursty"])
+def test_arrival_times_deterministic_and_monotone(kind):
+    a = arrival_times(kind, rate=50.0, n=300, seed=4)
+    b = arrival_times(kind, rate=50.0, n=300, seed=4)
+    assert a == b                            # bit-identical, seeded
+    assert a != arrival_times(kind, rate=50.0, n=300, seed=5)
+    assert len(a) == 300
+    assert all(t2 >= t1 for t1, t2 in zip(a, a[1:]))
+
+
+@pytest.mark.parametrize("kind", ["poisson", "diurnal", "bursty"])
+def test_arrival_times_hit_the_mean_rate(kind):
+    """All three processes are rate-parameterized by their *long-run
+    mean*: measured rate over a long stream lands near the asked-for
+    one (thinning and on-off modulation change the shape, not the mean)."""
+    rate, n = 80.0, 4000
+    # short modulation cycles so the stream covers many of them -- over a
+    # fraction of one, the phase *should* skew the measured mean
+    times = arrival_times(kind, rate=rate, n=n, seed=1, period_s=5.0,
+                          on_s=0.1, off_s=0.3)
+    measured = n / times[-1]
+    assert measured == pytest.approx(rate, rel=0.15)
+
+
+def test_bursty_is_burstier_than_poisson():
+    """The Markov-modulated process concentrates arrivals: its
+    inter-arrival squared coefficient of variation exceeds the Poisson
+    stream's (which sits near 1)."""
+    def cv2(kind):
+        t = np.asarray(arrival_times(kind, rate=50.0, n=3000, seed=2))
+        gaps = np.diff(t)
+        return float(np.var(gaps) / np.mean(gaps) ** 2)
+    assert cv2("bursty") > 1.5 * cv2("poisson")
+
+
+def test_arrival_times_rejects_bad_args():
+    with pytest.raises(ValueError, match="unknown arrival kind"):
+        arrival_times("uniform", rate=10.0, n=5)
+    with pytest.raises(ValueError, match="rate"):
+        arrival_times("poisson", rate=0.0, n=5)
+    assert arrival_times("poisson", rate=10.0, n=0) == []
+
+
+def test_generate_tenants_shapes_and_merge():
+    whale = TenantSpec("whale", share=0.75)
+    mouse = TenantSpec("mouse", share=0.25)
+    stream = generate("poisson", rate=100.0, n=800,
+                      tenants=(whale, mouse), seed=3, trace="uniform",
+                      lo=4, hi=8)
+    frac = sum(a.tenant == "whale" for a in stream) / len(stream)
+    assert frac == pytest.approx(0.75, abs=0.05)
+    assert all(4 <= a.shape[0] <= 8 and a.shape[0] == a.shape[1]
+               for a in stream)
+    svd = generate("poisson", rate=100.0, n=10, op="svd", seed=3,
+                   trace="uniform", lo=4, hi=8)
+    assert all(a.shape == (4 * a.shape[1], a.shape[1]) for a in svd)
+    merged = merge(stream[:5], svd[:5])
+    assert [a.rid for a in merged] == list(range(10))
+    assert all(x.t <= y.t for x, y in zip(merged, merged[1:]))
+
+
+def test_materialize_is_order_independent():
+    a = generate("poisson", rate=10.0, n=4, seed=0, lo=4, hi=8)
+    m2 = materialize(a[2], seed=9)
+    _ = materialize(a[0], seed=9)            # interleave other requests
+    np.testing.assert_array_equal(materialize(a[2], seed=9), m2)
+
+
+def test_profile_of_measures_the_stream():
+    stream = generate("poisson", rate=50.0, n=400, seed=1, trace="uniform",
+                      lo=4, hi=8)
+    prof = profile_of(stream)
+    assert prof.requests == 400
+    span = stream[-1].t - stream[0].t
+    assert prof.arrival_rate == pytest.approx(400 / span)
+    assert prof.duration_s == pytest.approx(span)
+
+
+def test_parse_tenants():
+    ts = parse_tenants("whale:0.9,mouse:0.1")
+    assert [(t.name, t.share) for t in ts] == [("whale", 0.9),
+                                               ("mouse", 0.1)]
+    rt, batch = parse_tenants("rt:0.2:2:p, batch:0.8:1")
+    assert rt.priority and rt.weight == 2.0
+    assert not batch.priority
+    with pytest.raises(ValueError):
+        parse_tenants(",")
+
+
+# ---------------------------------------------------------------------------
+# token bucket
+# ---------------------------------------------------------------------------
+
+def test_token_bucket_enforces_rate_under_injected_clock():
+    b = TokenBucket(rate=2.0, burst=2.0)
+    assert b.try_take(0.0) and b.try_take(0.0)   # burst depth
+    assert not b.try_take(0.0)                   # empty
+    assert not b.try_take(0.4)                   # 0.8 tokens refilled
+    assert b.try_take(0.5)                       # 1.0 -- one full token
+    assert not b.try_take(0.5)
+
+
+def test_token_bucket_caps_at_burst_and_unlimited_rate():
+    b = TokenBucket(rate=10.0, burst=3.0)
+    b.try_take(0.0)
+    for _ in range(3):                           # long idle refills to burst,
+        assert b.try_take(100.0)                 # not rate * idle
+    assert not b.try_take(100.0)
+    assert all(TokenBucket(rate=0.0).try_take(0.0) for _ in range(100))
+
+
+# ---------------------------------------------------------------------------
+# fair queue
+# ---------------------------------------------------------------------------
+
+def test_wfq_serves_in_weight_proportion():
+    q = FairQueue({"a": 3.0, "b": 1.0}, mode="wfq")
+    for i in range(12):
+        q.push("a", ("a", i), work=1.0)
+        q.push("b", ("b", i), work=1.0)
+    got = [q.pop()[0] for _ in range(8)]
+    assert got.count("a") == 6 and got.count("b") == 2   # 3:1
+
+
+def test_wfq_idle_tenant_rejoins_at_current_vtime():
+    """SFQ rule: an idle tenant must not bank virtual time -- after ``b``
+    sat out, its items compete from current vtime (interleaving 1:1 with
+    ``a``), not from tag 0 (which would drain b's whole burst first)."""
+    q = FairQueue({"a": 1.0, "b": 1.0}, mode="wfq")
+    for i in range(6):
+        q.push("a", f"a{i}", work=1.0)       # tags 0..5
+    for _ in range(4):
+        q.pop()                              # vtime advances to 3.0
+    q.push("b", "b0", work=1.0)              # tag max(3.0, 0) = 3.0
+    q.push("b", "b1", work=1.0)              # tag 4.0
+    assert [q.pop()[0] for _ in range(4)] == ["b", "a", "b", "a"]
+
+
+def test_priority_lane_bypasses_wfq():
+    q = FairQueue({"a": 1.0, "rt": 1.0}, mode="wfq")
+    for i in range(5):
+        q.push("a", i, work=1.0)
+    q.push("rt", "now", work=1.0, priority=True)
+    assert q.pop() == ("rt", 1.0, "now")
+    assert q.priority_work() == 0.0
+    assert q.pop()[0] == "a"
+
+
+def test_fifo_mode_is_arrival_order():
+    q = FairQueue({"a": 100.0, "b": 1.0}, mode="fifo")
+    q.push("b", 0, work=5.0)
+    q.push("a", 1, work=0.1)
+    assert [q.pop()[2] for _ in range(2)] == [0, 1]
+
+
+def test_fair_queue_work_accounting():
+    q = FairQueue({"a": 1.0, "b": 1.0}, mode="wfq")
+    q.push("a", 0, work=2.0)
+    q.push("b", 1, work=3.0)
+    assert q.queued_work() == pytest.approx(5.0)
+    assert q.queued_work("a") == pytest.approx(2.0)
+    assert q.depth("b") == 1 and len(q) == 2
+    assert q.weight_share("a") == pytest.approx(0.5)
+    q.pop()
+    assert len(q) == 1
+    with pytest.raises(IndexError):
+        FairQueue(mode="fifo").pop()
+
+
+# ---------------------------------------------------------------------------
+# admission control
+# ---------------------------------------------------------------------------
+
+def _admission(mode, slo_ms=50.0, **kw):
+    return AdmissionController(CostModel(device_work_per_s=1e6),
+                               BucketPolicy(T=8), slo_ms / 1e3,
+                               mode=mode, **kw)
+
+
+def test_admission_shed_vs_admit_on_backlog():
+    adm = _admission("shed")
+    svc = adm.service_s("eigh", (8, 8))
+    assert 0 < svc < 0.05
+    assert adm.decide("eigh", (8, 8), backlog_s=0.0).outcome == "admit"
+    d = adm.decide("eigh", (8, 8), backlog_s=10.0)
+    assert d.outcome == "shed" and d.backlog_s == 10.0
+
+
+def test_admission_none_admits_everything():
+    adm = _admission("none")
+    assert adm.decide("eigh", (8, 8), backlog_s=1e9).outcome == "admit"
+
+
+def test_admission_degrade_when_relaxed_variant_fits():
+    adm = _admission("degrade", degrade_frac=0.5)
+    full = adm.service_s("eigh", (8, 8))
+    deg = adm.service_s("eigh", (8, 8), sweeps_frac=0.5)
+    assert deg < full
+    # backlog placed so full misses the SLO but the relaxed variant fits
+    backlog = 0.05 - (full + deg) / 2
+    d = adm.decide("eigh", (8, 8), backlog_s=backlog)
+    assert d.outcome == "degrade" and d.predicted_s == pytest.approx(deg)
+    # and even the relaxed variant infeasible -> shed
+    assert adm.decide("eigh", (8, 8), backlog_s=10.0).outcome == "shed"
+
+
+def test_admission_rejects_unknown_mode():
+    with pytest.raises(ValueError, match="admission mode"):
+        _admission("maybe")
+
+
+# ---------------------------------------------------------------------------
+# the frontend, virtual-clock mode
+# ---------------------------------------------------------------------------
+
+def _virtual_run(stream, tenants, scheduler="wfq", admission="shed",
+                 slo_ms=40.0, model=None, **fe_kw):
+    clk = VirtualClock()
+    srv = _server(clock=clk)
+    fe = TrafficFrontend(srv, tenants, slo_ms=slo_ms, scheduler=scheduler,
+                         admission=admission,
+                         model=model or CostModel(device_work_per_s=1e5),
+                         seed=1, **fe_kw)
+    return fe.run(stream, pace=False)
+
+
+def test_virtual_run_is_bit_deterministic():
+    stream = generate("poisson", rate=400.0, n=60, seed=2, trace="uniform",
+                      lo=4, hi=8)
+    a = _virtual_run(stream, (TenantSpec("t0"),))
+    b = _virtual_run(stream, (TenantSpec("t0"),))
+    assert a.digest == b.digest
+    assert a.outcomes == b.outcomes
+    assert a.shed > 0                        # saturating stream did shed
+    assert a.served + a.degraded + a.shed + a.throttled == a.requests == 60
+
+
+def test_virtual_run_requires_virtual_clock():
+    srv = _server()                          # wall clock
+    fe = TrafficFrontend(srv, (TenantSpec("t0"),), slo_ms=40.0)
+    stream = generate("poisson", rate=10.0, n=3, seed=0, lo=4, hi=8)
+    with pytest.raises(TypeError, match="VirtualClock"):
+        fe.run(stream, pace=False)
+    with pytest.raises(ValueError, match="empty"):
+        TrafficFrontend(_server(clock=VirtualClock()),
+                        (TenantSpec("t0"),)).run([], pace=False)
+
+
+def test_degraded_request_matches_relaxed_config_server():
+    """The degrade path's whole claim: fewer sweeps through the *live*
+    server equals a server configured at that sweep count -- same
+    ``SolverKey``, bitwise-identical results."""
+    a = generate("poisson", rate=10.0, n=1, seed=0, trace="uniform",
+                 lo=6, hi=6)[0]
+    mat = materialize(a, seed=1)
+
+    live = _server(sweeps=6)
+    t1 = live.submit(mat, sweeps=3)          # the frontend's degrade submit
+    live.drain()
+    assert t1.record.sweeps == 3
+    relaxed = _server(sweeps=3)
+    t2 = relaxed.submit(mat)
+    relaxed.drain()
+    r1, r2 = t1.result(), t2.result()
+    np.testing.assert_array_equal(r1.eigenvalues, r2.eigenvalues)
+    np.testing.assert_array_equal(r1.eigenvectors, r2.eigenvectors)
+
+
+def test_frontend_degrade_mode_produces_degraded_outcomes():
+    """Under a deliberately slow cost model every request misses at full
+    sweeps; degrade admission keeps serving (relaxed variant fits), so
+    the run reports degraded completions instead of sheds."""
+    stream = generate("poisson", rate=20.0, n=12, seed=2, trace="uniform",
+                      lo=4, hi=8)
+    model = CostModel(device_work_per_s=1e6)
+    fe_slo = 1e3 * 1.2 * model.request_service_s("eigh", (8, 8), batch=4,
+                                                 sweeps_frac=0.5)
+    rep = _virtual_run(stream, (TenantSpec("t0"),), admission="degrade",
+                       slo_ms=fe_slo, model=model, degrade_frac=0.5)
+    assert rep.degraded > 0
+    assert rep.degraded + rep.served + rep.shed == rep.requests
+    assert set(rep.outcomes.values()) <= {"served", "degraded", "shed"}
+
+
+def test_frontend_throttles_over_quota_tenant():
+    spec = TenantSpec("t0", rate_limit=5.0, burst=2.0)
+    stream = generate("poisson", rate=500.0, n=40, seed=1, trace="uniform",
+                      lo=4, hi=8, tenants=(spec,))
+    rep = _virtual_run(stream, (spec,), admission="none", slo_ms=None)
+    assert rep.throttled > 0
+    assert rep.throttled + rep.served == rep.requests
+
+
+def test_wfq_backlog_is_tenant_local_fifo_is_global():
+    """The scheduler-aware admission seam: a whale's queue must not count
+    against a mouse under WFQ, but does under FIFO."""
+    clk = VirtualClock()
+    srv = _server(clock=clk)
+    model = CostModel(device_work_per_s=1e6)
+    for scheduler, expect_light in (("wfq", True), ("fifo", False)):
+        fe = TrafficFrontend(srv, (TenantSpec("whale"), TenantSpec("mouse")),
+                             slo_ms=40.0, scheduler=scheduler, model=model)
+        fe.queue.push("whale", None, work=50.0)
+        mouse_backlog = fe._backlog_s("mouse", residual_s=0.0)
+        if expect_light:
+            assert mouse_backlog == pytest.approx(0.0)
+        else:
+            assert mouse_backlog == pytest.approx(50.0)
+
+
+def test_priority_tenant_sees_only_priority_backlog():
+    srv = _server(clock=VirtualClock())
+    fe = TrafficFrontend(srv, (TenantSpec("batch"),
+                               TenantSpec("rt", priority=True)),
+                         slo_ms=40.0, model=CostModel())
+    fe.queue.push("batch", None, work=50.0)
+    assert fe._backlog_s("rt", residual_s=0.1) == pytest.approx(0.1)
+    fe.queue.push("rt", None, work=2.0, priority=True)
+    assert fe._backlog_s("rt", residual_s=0.1) == pytest.approx(2.1)
+
+
+# ---------------------------------------------------------------------------
+# tenant-labeled metrics
+# ---------------------------------------------------------------------------
+
+def test_tenant_accounting_families_and_summary():
+    t = [0.0]
+    acct = TenantAccounting(MetricRegistry(clock=lambda: t[0]),
+                            clock=lambda: t[0])
+    acct.outcome("whale", "served")
+    acct.outcome("whale", "shed")
+    acct.outcome("mouse", "served")
+    acct.served("whale", 0.010, slo_ok=True)
+    acct.served("mouse", 0.200, slo_ok=False)
+    with pytest.raises(ValueError, match="unknown outcome"):
+        acct.outcome("whale", "vanished")
+    text = acct.registry.to_prometheus()
+    assert ('frontend_requests_total{tenant="whale",outcome="shed"} 1'
+            in text)
+    assert ('frontend_tenant_slo_total{tenant="mouse",status="miss"} 1'
+            in text)
+    doc = acct.summary(span_s=2.0)
+    assert doc["whale"]["slo_ok"] == 1
+    assert doc["whale"]["goodput_rps"] == pytest.approx(0.5)
+    assert doc["mouse"]["latency_p99_ms"] == pytest.approx(200.0)
+    assert acct.tenants() == ["mouse", "whale"]
+
+
+def test_frontend_mirrors_outcomes_into_accounting():
+    acct = TenantAccounting()
+    stream = generate("poisson", rate=400.0, n=50, seed=2, trace="uniform",
+                      lo=4, hi=8)
+    rep = _virtual_run(stream, (TenantSpec("t0"),), accounting=acct)
+    doc = acct.summary()
+    assert doc["t0"]["served"] == rep.served
+    assert doc["t0"]["shed"] == rep.shed
+    text = acct.registry.to_prometheus()
+    assert 'frontend_tenant_goodput_rps{tenant="t0"}' in text
+    assert 'frontend_tenant_latency_seconds' in text
