@@ -2,7 +2,12 @@
 count across data modalities -- the offline study that justifies the fixed
 50-sweep schedule.  Validates the paper's claims: standard datasets hit the
 numerical noise floor within 10-15 sweeps; ill-conditioned (clustered
-eigenvalue) data needs more, motivating the 50-sweep factor of safety."""
+eigenvalue) data needs more, motivating the 50-sweep factor of safety.
+
+A precision axis rides along (ISSUE 9): the measured relative Frobenius
+error of the fp32 and bf16-streamed eigenvalue spectra against the fp64
+subprocess oracle, reported next to the documented ``ERROR_BUDGETS``
+ceiling each must stay under."""
 from __future__ import annotations
 
 import numpy as np
@@ -10,6 +15,33 @@ import numpy as np
 from repro.core.schedule import (convergence_curve, make_ill_conditioned,
                                  sweeps_to_tolerance)
 from .common import emit, synthetic_dataset
+
+
+def precision_axis(fast: bool = True):
+    """Measured error vs the fp64 oracle per precision policy.
+
+    One small dataset (the oracle pays a subprocess + x64 solve per op);
+    the budgets are ceilings, the emitted numbers the measured truth."""
+    from repro.core import precision as prec
+    from repro.kernels import ops as kops
+    from repro.core.jacobi import jacobi_eigh
+
+    x = synthetic_dataset(512, 24, 9)
+    sweeps = 15 if fast else 30
+    oracle_c = prec.run_fp64_oracle(x, "covariance")
+    oracle_e = prec.run_fp64_oracle(x, "eigh", sweeps=sweeps)
+    for precision in ("fp32", "bf16_fp32acc"):
+        C = kops.covariance(x, block_m=64, precision=precision,
+                            backend="interpret")
+        err_c = prec.rel_frobenius(np.asarray(C), oracle_c["C"])
+        res = jacobi_eigh(np.asarray(C), sweeps=sweeps)
+        err_e = prec.rel_frobenius(np.asarray(res.eigenvalues),
+                                   oracle_e["eigenvalues"])
+        emit(f"fig8/precision/{precision}", "",
+             f"cov_err={err_c:.2e}"
+             f";budget={prec.ERROR_BUDGETS[precision]['covariance']:.0e}"
+             f";eigh_err={err_e:.2e}"
+             f";eigh_budget={prec.ERROR_BUDGETS[precision]['eigh']:.0e}")
 
 
 def run(fast: bool = True):
@@ -36,3 +68,4 @@ def run(fast: bool = True):
     ill = [k for n, k in floors if n.startswith("ill")]
     emit("fig8/claim_50_sweep_safety_margin", "",
          f"ill_conditioned={ill[0]};margin_ok={ill[0] <= 50}")
+    precision_axis(fast=fast)

@@ -1,14 +1,52 @@
-"""EXPERIMENTS Sec. Roofline source: reads the dry-run records and emits
-the three-term roofline per (arch x shape) on the single-pod mesh, plus
-the dominant bottleneck and MODEL_FLOPS/HLO_FLOPS utility ratio."""
+"""Roofline accounting for the fused hot path (ISSUE 9 tentpole d).
+
+Two sections:
+
+  analytic   the original (arch x shape) three-term roofline read from the
+             dry-run records (CSV only; needs ``repro.launch.dryrun``).
+
+  measured   achieved-vs-peak FLOPs per (op, backend, precision, variant,
+             bucket) on *this* host, timed with the production jit path and
+             wrapped in ``obs.device_profile`` so a nightly run can attach
+             the jax.profiler trace as a CI artifact (set
+             ``ROOFLINE_TRACE_DIR``; empty = tracing off).
+
+The measured rows land in ``BENCH_roofline.json`` and are gated by
+``scripts/check_bench.py``:
+
+  * fused covariance must beat the unfused block-streamed path by >= 1.15x
+    device time on the large bucket (fp32),
+  * bf16 operand streaming must beat fp32 by >= 1.3x achieved FLOPs where
+    the platform supports it (``bf16_supported`` -- TPU; CPU bf16 matmul
+    is emulated and slower, so those rows carry ``false`` and the gate
+    skips them).
+
+FLOPs/bytes are *model* numbers (what the math requires, not what XLA
+executes): covariance C = X^T X is 2mn^2 FLOPs over mn operand reads +
+n^2 accumulator traffic; one fused Jacobi sweep launch with k pivot pairs
+rotates two rows + two columns of C and two columns of V, ~18nk FLOPs
+over the 2(n^2) matrices.  ``achieved_flops`` = model FLOPs / measured
+time; ``frac_of_peak`` divides by a peak calibrated from a large XLA
+fp32 matmul on the same host (the realistic ceiling, not the datasheet).
+"""
 from __future__ import annotations
 
 import json
+import os
 import pathlib
 
-from .common import emit
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .common import emit, emit_json, time_call
 
 DRYRUN_DIR = pathlib.Path(__file__).resolve().parent.parent / "experiments" / "dryrun"
+
+# (m, n) per bucket: "large" is the serving tier the perf gate watches
+BUCKETS = {"small": (512, 64), "large": (4096, 256)}
+UNFUSED_BLOCK = 64        # the server's default streaming block (config T)
+SWEEP_N = {"small": 64, "large": 256}
 
 
 def records(mesh="16x16"):
@@ -20,7 +58,7 @@ def records(mesh="16x16"):
     return out
 
 
-def run(fast: bool = True):
+def analytic():
     recs = records()
     if not recs:
         emit("roofline/missing", "", "run repro.launch.dryrun --all first")
@@ -40,3 +78,167 @@ def run(fast: bool = True):
     mp = records("2x16x16")
     emit("roofline/multipod_cells_compiled", "",
          f"{sum('skipped' not in r for r in mp)}/{len(mp)}")
+
+
+def calibrate_peak(reps: int = 3) -> float:
+    """Achievable fp32 FLOP/s on this host: one big XLA matmul.
+
+    The realistic ceiling every ``frac_of_peak`` is measured against --
+    a kernel can only aspire to what XLA itself reaches here."""
+    k = 1024
+    a = jnp.asarray(np.random.default_rng(0).standard_normal(
+        (k, k)).astype(np.float32))
+    f = jax.jit(jnp.matmul)
+    us = time_call(f, a, a, reps=reps)
+    return 2.0 * k ** 3 / (us * 1e-6)
+
+
+def _cov_rows(bucket: str, peak: float, reps: int, bf16_ok: bool):
+    from repro.core.covariance import blocked_covariance
+    from repro.core import precision as prec
+    from repro.kernels import ops as kops
+
+    m, n = BUCKETS[bucket]
+    x = jnp.asarray(np.random.default_rng(1).standard_normal(
+        (m, n)).astype(np.float32))
+    flops = 2.0 * m * n * n
+    rows = []
+
+    def row(variant, backend, precision, us, bytes_):
+        rows.append({
+            "op": "covariance", "bucket": bucket, "m": m, "n": n,
+            "variant": variant, "backend": backend, "precision": precision,
+            "bf16_supported": bf16_ok or precision == "fp32",
+            "us_per_call": us,
+            "model_flops": flops, "model_bytes": bytes_,
+            "achieved_flops": flops / (us * 1e-6),
+            "achieved_gbps": bytes_ / (us * 1e-6) / 1e9,
+            "frac_of_peak": flops / (us * 1e-6) / peak,
+        })
+
+    # unfused baselines: the block-streamed scan at the server default T,
+    # once on plain XLA and once with every block matmul routed through
+    # the mm_engine kernel backend -- each is what a server with that
+    # ``backend`` config runs when ``fused=False``, so the fusion gate
+    # compares fused and unfused rows *of the same backend*
+    # (each of the m/T launches re-reads + re-writes the n^2 accumulator)
+    bytes_unf = 4.0 * (m * n + 2.0 * (m / UNFUSED_BLOCK) * n * n)
+    f_unf = jax.jit(lambda a: blocked_covariance(a, block_m=UNFUSED_BLOCK))
+    row("unfused", "xla", "fp32", time_call(f_unf, x, reps=reps), bytes_unf)
+    mm = lambda a, b: kops.mm_engine_matmul(a, b, block=UNFUSED_BLOCK,
+                                            backend="interpret")
+    f_unf_k = jax.jit(lambda a: blocked_covariance(
+        a, block_m=UNFUSED_BLOCK, matmul_fn=mm))
+    row("unfused", "interpret", "fp32", time_call(f_unf_k, x, reps=reps),
+        bytes_unf)
+
+    # fused one-HBM-pass kernel: operands stream once, Gram stays on-chip
+    block = max(m // 2, UNFUSED_BLOCK)
+    for precision in ("fp32", "bf16_fp32acc"):
+        opb = jnp.dtype(prec.operand_dtype(precision)).itemsize
+        for backend in ("interpret", "ref"):
+            f = jax.jit(lambda a, _p=precision, _b=backend: kops.covariance(
+                a, block_m=block, precision=_p, backend=_b))
+            us = time_call(f, x, reps=reps)
+            row("fused", backend, precision, us, opb * m * n + 4.0 * n * n)
+    return rows
+
+
+def _sweep_rows(bucket: str, peak: float, reps: int):
+    from repro.core.jacobi import round_robin_rounds
+    from repro.kernels import ops as kops, ref as kref
+
+    n = SWEEP_N[bucket]
+    rng = np.random.default_rng(2)
+    a = rng.standard_normal((n, n)).astype(np.float32)
+    C = jnp.asarray((a + a.T) / 2)
+    V = jnp.eye(n, dtype=jnp.float32)
+    pairs = jnp.asarray(round_robin_rounds(n)[0])
+    k = int(pairs.shape[0])
+    flops = 18.0 * n * k
+    bytes_ = 4.0 * 4 * n * n              # C and V, read + write
+    rows = []
+    variants = {
+        "fused": jax.jit(lambda c, v, p: kops.jacobi_sweep(
+            c, v, p, backend="interpret")),
+        "unfused": jax.jit(lambda c, v, p: kref.jacobi_sweep_step(c, v, p)),
+    }
+    for variant, f in variants.items():
+        us = time_call(f, C, V, pairs, reps=reps)
+        rows.append({
+            "op": "jacobi_sweep", "bucket": bucket, "m": n, "n": n,
+            "variant": variant,
+            "backend": "interpret" if variant == "fused" else "xla",
+            "precision": "fp32", "bf16_supported": True,
+            "us_per_call": us,
+            "model_flops": flops, "model_bytes": bytes_,
+            "achieved_flops": flops / (us * 1e-6),
+            "achieved_gbps": bytes_ / (us * 1e-6) / 1e9,
+            "frac_of_peak": flops / (us * 1e-6) / peak,
+        })
+    return rows
+
+
+def trace_pass(trace_dir: str):
+    """One call of each fused kernel under ``obs.device_profile`` -- the
+    jax.profiler artifact a nightly run uploads.  Deliberately *separate*
+    from the timed pass: profiling inflates CPU device times 3-4x, so the
+    gated numbers must never be measured under the tracer."""
+    from repro import obs
+    from repro.core.jacobi import round_robin_rounds
+    from repro.kernels import ops as kops
+
+    m, n = BUCKETS["large"]
+    x = jnp.asarray(np.random.default_rng(1).standard_normal(
+        (m, n)).astype(np.float32))
+    a = np.random.default_rng(2).standard_normal((n, n)).astype(np.float32)
+    C = jnp.asarray((a + a.T) / 2)
+    V = jnp.eye(n, dtype=jnp.float32)
+    pairs = jnp.asarray(round_robin_rounds(n)[0])
+    with obs.device_profile(trace_dir):
+        for precision in ("fp32", "bf16_fp32acc"):
+            jax.block_until_ready(kops.covariance(
+                x, block_m=m // 2, precision=precision,
+                backend="interpret"))
+        jax.block_until_ready(kops.jacobi_sweep(
+            C, V, pairs, backend="interpret"))
+
+
+def measured(fast: bool = True):
+    reps = 3 if fast else 7
+    # bf16 operand streaming only pays on hardware with native bf16 MXU
+    # paths; CPU emulates it slower than fp32, so the bf16 gate is scoped
+    # to rows measured on TPU
+    bf16_ok = jax.default_backend() == "tpu"
+    trace_dir = os.environ.get("ROOFLINE_TRACE_DIR", "")
+    peak = calibrate_peak(reps=reps)
+    rows = []
+    for bucket in BUCKETS:
+        rows += _cov_rows(bucket, peak, reps, bf16_ok)
+        rows += _sweep_rows(bucket, peak, reps)
+    if trace_dir:
+        trace_pass(trace_dir)
+    for r in rows:
+        emit(f"roofline/{r['op']}/{r['bucket']}/{r['variant']}/"
+             f"{r['backend']}/{r['precision']}",
+             f"{r['us_per_call']:.1f}",
+             f"achieved_gflops={r['achieved_flops'] / 1e9:.2f}"
+             f";frac_of_peak={r['frac_of_peak']:.4f}")
+    emit("roofline/peak_calibrated_gflops", "", f"{peak / 1e9:.1f}")
+    emit_json("roofline", {
+        "peak_flops": peak,
+        "unfused_block": UNFUSED_BLOCK,
+        "trace_dir": trace_dir or None,
+        "rows": rows,
+    })
+    return rows
+
+
+def run(fast: bool = True):
+    analytic()
+    measured(fast=fast)
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

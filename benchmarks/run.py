@@ -7,7 +7,9 @@ Prints ``name,us_per_call,derived`` CSV.
   fig8  -- Frobenius-norm convergence study (paper Fig. 8 / Sec. VII-D)
   dse   -- T/S design-space exploration (paper Figs. 9-11)
   table3-- resource/config comparison (paper Tables I-III)
-  roofline -- (arch x shape) roofline terms from the dry-run records
+  roofline -- analytic (arch x shape) terms from the dry-run records,
+              plus measured achieved-vs-peak FLOPs per (op, backend,
+              precision, fused/unfused) -> BENCH_roofline.json
   serve -- batched multi-tenant serving throughput (repro.serving)
   autotune -- tuned-vs-default serving-plan gain (serving.autotune)
   cold_start -- fresh-replica TTFR: cold JIT vs warm disk cache vs warmup

@@ -36,6 +36,14 @@ class PCAConfig:
     # mm_engine op in the backend registry (repro.backends).  The old
     # boolean ``use_pallas=True`` is spelled ``backend="pallas"`` now.
     backend: Optional[str] = None
+    # mixed-precision policy for the covariance/Gram leg ("fp32" |
+    # "bf16_fp32acc" | "fp64"; see repro.core.precision).  Rotations,
+    # angles and back-projections always stay fp32.
+    precision: str = "fp32"
+    # route the hot path through the fused one-launch kernels (covariance
+    # + jacobi_sweep registry ops); bitwise-identical to the unfused path
+    # at fp32
+    fused: bool = False
 
     @property
     def use_pallas(self) -> bool:
@@ -86,7 +94,9 @@ def fit(X, config: PCAConfig = PCAConfig()) -> PCAResult:
         mean = jnp.zeros((X.shape[1],), X.dtype)
         scale = jnp.ones((X.shape[1],), X.dtype)
     mm = config.matmul_fn()
-    C = blocked_covariance(Xs, block_m=config.T, matmul_fn=mm)
+    C = blocked_covariance(Xs, block_m=config.T, matmul_fn=mm,
+                           fused=config.fused, precision=config.precision,
+                           backend=config.backend)
     res: EighResult = jacobi_eigh(
         C,
         sweeps=config.sweeps,
@@ -95,6 +105,8 @@ def fit(X, config: PCAConfig = PCAConfig()) -> PCAResult:
         rotation=config.rotation,
         angle=config.angle,
         matmul_fn=mm,
+        fused=config.fused,
+        fused_backend=config.backend,
     )
     evcr, cvcr = evcr_cvcr(res.eigenvalues)
     return PCAResult(res.eigenvectors, res.eigenvalues, mean, scale, evcr,

@@ -1,0 +1,178 @@
+"""Fused hot-path kernels: covariance accumulation and the Jacobi sweep
+step (paper Sec. VI -- the unified fabric's one-pass dataflow).
+
+The paper's headline win is architectural *fusion*: MM block streaming and
+Jacobi/CORDIC rotations share one fabric, so intermediates never round-trip
+through external memory.  The registry ops here close the same gap in the
+software hot path:
+
+``fused_covariance``
+    C = X^T X in ONE launch and one HBM pass.  The unfused path
+    (``core.covariance.blocked_covariance`` over ``mm_engine_matmul``)
+    launches one kernel per sample block and materialises each partial C in
+    HBM between launches; here the grid streams sample panels along a single
+    contraction dimension while the full (n, n) accumulator stays stationary
+    in VMEM scratch.  Accumulation is always fp32 (or fp64 on the x64
+    reference lane); operands may stream as bf16 (``bf16_fp32acc``), halving
+    HBM traffic -- the accumulator dtype never follows the operand dtype.
+
+    Bitwise contract: with fp32 operands and matching ``block_m`` the result
+    is bit-identical to ``blocked_covariance`` (same panel partials in the
+    same order, fp32 accumulation throughout).
+
+``jacobi_sweep_step``
+    One Jacobi pivot round -- gather pivots, rotation angles, null-pivot
+    guard, row/col rotation -- in ONE launch over (C, V).  The unfused
+    ``_sweep_scan`` body runs the same chain as separate XLA ops with C and
+    V round-tripping HBM between them.  The kernel body *is* the unfused
+    body (same ``core.jacobi`` / ``core.cordic`` functions, traced inside
+    the kernel), which is what makes the fused path bitwise-identical to
+    the unfused one for every angle mode and pivot strategy.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cordic import ANGLE_MODES, rotation_params_cordic
+from repro.core.jacobi import _apply_rotations_rowcol, _null_pivot_guard
+
+
+def _kernel_angle_fn(angle: str):
+    """The angle function, in its Pallas-kernel-safe spelling.
+
+    The CORDIC mode's ``fori_loop`` closes over the fixed-point angle
+    table (a constant device array a kernel body cannot capture); its
+    unrolled spelling uses per-stage python-int constants and is
+    bit-identical (pure int32 micro-rotations)."""
+    if angle == "cordic":
+        return functools.partial(rotation_params_cordic, unroll=True)
+    return ANGLE_MODES[angle]
+
+from . import compat
+from .compat import pl
+
+
+# -- fused covariance -------------------------------------------------------
+
+def _cov_kernel(x1_ref, x2_ref, o_ref, acc_ref, *, n_k: int, out_dtype):
+    k = pl.program_id(0)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # one streamed sample panel folded into the stationary (n, n)
+    # accumulator: X_k^T X_k with accumulator-dtype accumulation regardless
+    # of the operand dtype (bf16 operands still accumulate in fp32)
+    acc_ref[...] += jax.lax.dot_general(
+        x1_ref[...], x2_ref[...],
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=acc_ref.dtype)
+
+    @pl.when(k == n_k - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(out_dtype)
+
+
+def fused_covariance(
+    x: jax.Array,
+    *,
+    block_m: int = 1024,
+    acc_dtype=jnp.float32,
+    out_dtype=None,
+    interpret: bool = False,
+) -> jax.Array:
+    """C = x^T x in one launch; sample panels stream along the only grid
+    dimension while the full Gram accumulator stays in VMEM scratch.
+
+    ``x`` is (m, n) with m a multiple of ``block_m`` (``ops.covariance``
+    zero-pads arbitrary m -- zero sample rows add exactly nothing to the
+    Gram matrix).  Operand dtype is taken from ``x`` (cast *before* the
+    call so bf16 operands stream at half the HBM bytes); accumulation and
+    output are ``acc_dtype``/``out_dtype``.
+    """
+    m, n = x.shape
+    assert m % block_m == 0, (m, block_m)
+    out_dtype = out_dtype or acc_dtype
+    n_k = m // block_m
+
+    return pl.pallas_call(
+        functools.partial(_cov_kernel, n_k=n_k, out_dtype=out_dtype),
+        grid=(n_k,),
+        in_specs=[
+            pl.BlockSpec((block_m, n), lambda kk: (kk, 0)),
+            pl.BlockSpec((block_m, n), lambda kk: (kk, 0)),
+        ],
+        out_specs=pl.BlockSpec((n, n), lambda kk: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, n), out_dtype),
+        scratch_shapes=[compat.VMEM((n, n), acc_dtype)],
+        interpret=interpret,
+        name="fused_covariance",
+        **compat.compiler_params(dimension_semantics=("arbitrary",)),
+    )(x, x)
+
+
+# -- fused Jacobi sweep step ------------------------------------------------
+
+def _sweep_kernel(c_ref, v_ref, pairs_ref, co_ref, vo_ref, *, angle: str):
+    """One pivot round, fused: gather -> angle -> guard -> rotate.
+
+    The body reuses the exact ``core.jacobi`` / ``core.cordic`` functions
+    the unfused ``_sweep_scan`` body runs, so the fused round is
+    bit-identical to the unfused one -- including the null-pivot guard that
+    keeps bucket zero-padding exact.
+    """
+    C = c_ref[...]
+    V = v_ref[...]
+    pairs = pairs_ref[...]
+    p = pairs[:, 0]
+    q = pairs[:, 1]
+    apq = C[p, q]
+    app = C[p, p]
+    aqq = C[q, q]
+    _, c, s = _kernel_angle_fn(angle)(apq, app, aqq)
+    c, s = _null_pivot_guard(p, q, apq, c, s)
+    c = c.astype(C.dtype)
+    s = s.astype(C.dtype)
+    C, V = _apply_rotations_rowcol(C, V, p, q, c, s)
+    co_ref[...] = C
+    vo_ref[...] = V
+
+
+def jacobi_sweep_step(
+    C: jax.Array,
+    V: jax.Array,
+    pairs: jax.Array,
+    *,
+    angle: str = "rutishauser",
+    interpret: bool = False,
+):
+    """Apply one round of disjoint pivot rotations in a single launch.
+
+    C, V: (n, n); pairs: (k, 2) int32 pivot indices (disjoint within the
+    round for "parallel", a single pair for "cyclic"/"paper" orderings).
+    Returns the rotated (C, V).
+    """
+    n = C.shape[0]
+    k = pairs.shape[0]
+    struct = jax.ShapeDtypeStruct((n, n), C.dtype)
+    return pl.pallas_call(
+        functools.partial(_sweep_kernel, angle=angle),
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((n, n), lambda i: (0, 0)),
+            pl.BlockSpec((n, n), lambda i: (0, 0)),
+            pl.BlockSpec((k, 2), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((n, n), lambda i: (0, 0)),
+            pl.BlockSpec((n, n), lambda i: (0, 0)),
+        ],
+        out_shape=[struct, struct],
+        interpret=interpret,
+        name="jacobi_sweep",
+        **compat.compiler_params(dimension_semantics=("arbitrary",)),
+    )(C, V, pairs)

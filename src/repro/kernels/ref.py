@@ -15,6 +15,30 @@ def mm_engine(a, b, out_dtype=None):
     return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(out_dtype)
 
 
+def covariance_gram(x, acc_dtype=jnp.float32, out_dtype=None):
+    """One-dot Gram matrix C = x^T x with explicit accumulator dtype."""
+    out_dtype = out_dtype or acc_dtype
+    return lax.dot_general(
+        x, x, dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=acc_dtype).astype(out_dtype)
+
+
+def jacobi_sweep_step(C, V, pairs, angle: str = "rutishauser"):
+    """One pivot round, unfused: the exact ``core.jacobi`` sweep body."""
+    from repro.core.cordic import ANGLE_MODES
+    from repro.core.jacobi import _apply_rotations_rowcol, _null_pivot_guard
+    p = pairs[:, 0]
+    q = pairs[:, 1]
+    apq = C[p, q]
+    app = C[p, p]
+    aqq = C[q, q]
+    _, c, s = ANGLE_MODES[angle](apq, app, aqq)
+    c, s = _null_pivot_guard(p, q, apq, c, s)
+    c = c.astype(C.dtype)
+    s = s.astype(C.dtype)
+    return _apply_rotations_rowcol(C, V, p, q, c, s)
+
+
 def dle_scan(c):
     """(max |off-diag|, flat index) over a symmetric matrix."""
     piv = core_dle.find_pivot(c)

@@ -50,7 +50,9 @@ import jax
 
 # bump when the on-disk record layout changes; part of the content hash so
 # old-format entries are simply never looked up again
-CACHE_FORMAT = 1
+# (2: SolverKey grew precision + fused -- pre-mixed-precision executables
+# must never serve a precision-keyed request)
+CACHE_FORMAT = 2
 
 # default in-memory cap: generous for steady traffic (a few ops x a few
 # buckets x a few batches), small enough that a plan-churning server stays
@@ -103,6 +105,11 @@ class SolverKey:
     standardize: bool
     backend: Optional[str]
     block: Optional[int]
+    # mixed-precision policy and fused-kernel routing both change the
+    # compiled executable (operand dtypes / kernel launch structure), so
+    # they are key material like the numerics above
+    precision: str = "fp32"
+    fused: bool = False
 
     @classmethod
     def from_config(cls, config) -> "SolverKey":
@@ -110,7 +117,9 @@ class SolverKey:
             sweeps=config.sweeps, tol=config.tol, pivot=config.pivot,
             rotation=config.rotation, angle=config.angle,
             standardize=config.standardize, backend=config.backend,
-            block=(config.T if config.backend is not None else None))
+            block=(config.T if config.backend is not None else None),
+            precision=getattr(config, "precision", "fp32"),
+            fused=getattr(config, "fused", False))
 
 
 def content_hash(op: str, bucket: Tuple[int, ...], batch: int,

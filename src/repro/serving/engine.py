@@ -780,34 +780,46 @@ class PCAServer:
 
     # -- warmup / persistent tier -------------------------------------------
     @staticmethod
-    def _profile_shapes(profile) -> List[Tuple[str, Tuple[int, ...]]]:
-        """(op, shape) pairs of a ``TrafficProfile`` (anything with
-        ``shape_counts``) or of a bare iterable of (op, shape[, n])."""
+    def _profile_shapes(profile) -> List[Tuple[str, Tuple[int, ...], int]]:
+        """(op, shape, count) rows of a ``TrafficProfile`` (anything with
+        ``shape_counts``) or of a bare iterable of (op, shape[, n]);
+        rows without a count carry weight 1."""
         rows = getattr(profile, "shape_counts", profile)
-        return [(row[0], tuple(row[1])) for row in rows]
+        return [(row[0], tuple(row[1]),
+                 int(row[2]) if len(row) > 2 else 1) for row in rows]
 
     def _enumerate_keys(self, shapes, policy, executor, config,
                         max_batch) -> List[Tuple]:
         """Distinct (op, bucket, batch, backend) executables the given
-        (op, shape) pairs imply under the given plan facts.  The batch is
-        the plan's padded flush size -- the one executable steady-state
-        ``pad_batches`` traffic dispatches."""
-        keys, seen = [], set()
+        (op, shape[, count]) rows imply under the given plan facts.  The
+        batch is the plan's padded flush size -- the one executable
+        steady-state ``pad_batches`` traffic dispatches.
+
+        Keys come back in descending traffic weight (sum of the counts of
+        the shapes that bucket onto them), ties broken by first
+        appearance: warmup compiles the executables the profile says will
+        be hit most *first*, so an interrupted or still-running warmup has
+        already armed the highest-traffic (i.e. SLO-critical) paths."""
+        weight, order = {}, {}
         batch = executor.round_batch(max_batch)
-        for op, shape in shapes:
-            bucket = policy.bucket_shape(shape)
+        for row in shapes:
+            op, shape = row[0], row[1]
+            n = int(row[2]) if len(row) > 2 else 1
+            bucket = policy.bucket_shape(tuple(shape))
             backend = (self.backend_router(op, bucket)
                        if self.backend_router is not None
                        else config.backend)
             k = (op, bucket, batch, backend)
-            if k not in seen:
-                seen.add(k)
-                keys.append(k)
-        return keys
+            if k not in weight:
+                weight[k] = 0
+                order[k] = len(order)
+            weight[k] += n
+        return sorted(weight, key=lambda k: (-weight[k], order[k]))
 
     def warmup_keys(self, profile) -> List[Tuple]:
         """The distinct (op, bucket, batch, backend) executables
-        ``profile`` implies under the plan currently in force."""
+        ``profile`` implies under the plan currently in force, in
+        descending traffic weight (see ``_enumerate_keys``)."""
         return self._enumerate_keys(self._profile_shapes(profile),
                                     self.policy, self.executor,
                                     self.config, self.max_batch)

@@ -95,6 +95,8 @@ def jacobi_eigh_batched(
     matmul_fn: Optional[Callable] = None,
     tol: Optional[float] = None,
     sort: bool = True,
+    fused: bool = False,
+    fused_backend: Optional[str] = None,
 ) -> BatchedEighResult:
     """Batched symmetric eigendecomposition over a shape bucket.
 
@@ -102,7 +104,8 @@ def jacobi_eigh_batched(
       C: (B, nb, nb) zero-padded symmetric matrices sharing one bucket.
       n_active: (B,) true sizes (None = all full).  Rows/cols >= n_active[i]
         must be zero; they provably never mix (null-pivot guard).
-      remaining args: as ``core.jacobi.jacobi_eigh``.
+      remaining args: as ``core.jacobi.jacobi_eigh`` (``fused`` vmaps the
+        one-launch-per-round ``jacobi_sweep`` kernel across the batch).
     """
     C = jnp.asarray(C)
     if C.ndim != 3:
@@ -112,7 +115,8 @@ def jacobi_eigh_batched(
     def solve(c):
         return jacobi_eigh(c, sweeps=sweeps, pivot=pivot, rotation=rotation,
                            angle=angle, matmul_fn=matmul_fn, tol=tol,
-                           sort=False)
+                           sort=False, fused=fused,
+                           fused_backend=fused_backend)
 
     res = jax.vmap(solve)(C)
     w, V = res.eigenvalues, res.eigenvectors
@@ -127,6 +131,9 @@ def jacobi_svd_batched(
     n_cols=None,
     matmul_fn: Optional[Callable] = None,
     rcond: Optional[float] = None,
+    fused: bool = False,
+    fused_backend: Optional[str] = None,
+    precision: str = "fp32",
     **eigh_kwargs,
 ) -> BatchedSVDResult:
     """Batched thin SVD via the Gram-matrix path (paper PCA datapath).
@@ -150,8 +157,14 @@ def jacobi_svd_batched(
     n_rows = _as_n_active(n_rows, B, mb)
     n_cols = _as_n_active(n_cols, B, nb)
     mm = matmul_fn or jnp.matmul
-    gram = jax.vmap(lambda a: mm(a.T, a))(A)
+    if fused:
+        from repro.kernels import ops as kops
+        gram = jax.vmap(lambda a: kops.covariance(
+            a, precision=precision, backend=fused_backend))(A)
+    else:
+        gram = jax.vmap(lambda a: mm(a.T, a))(A)
     res = jacobi_eigh_batched(gram, n_active=n_cols, matmul_fn=matmul_fn,
+                              fused=fused, fused_backend=fused_backend,
                               **eigh_kwargs)
     s = jnp.sqrt(jnp.maximum(res.eigenvalues, 0.0))
     safe = jnp.maximum(s, 1e-30)
@@ -215,11 +228,17 @@ def pca_fit_batched(
         Xs = X
         mean = jnp.zeros((B, db), X.dtype)
         scale = jnp.ones((B, db), X.dtype)
-    C = jax.vmap(lambda x: mm(x.T, x))(Xs)
+    if config.fused:
+        from repro.kernels import ops as kops
+        C = jax.vmap(lambda x: kops.covariance(
+            x, precision=config.precision, backend=config.backend))(Xs)
+    else:
+        C = jax.vmap(lambda x: mm(x.T, x))(Xs)
     res = jacobi_eigh_batched(
         C, n_active=n_cols, sweeps=config.sweeps, pivot=config.pivot,
         rotation=config.rotation, angle=config.angle,
-        matmul_fn=config.matmul_fn(), tol=config.tol)
+        matmul_fn=config.matmul_fn(), tol=config.tol,
+        fused=config.fused, fused_backend=config.backend)
     evcr, cvcr = jax.vmap(evcr_cvcr)(res.eigenvalues)
     return BatchedPCAResult(res.eigenvectors, res.eigenvalues, mean, scale,
                             evcr, cvcr, res.off_norm, n_rows, n_cols)
@@ -236,11 +255,13 @@ def build_solver_fn(op: str, config: PCAConfig) -> Callable:
     """
     kw = dict(sweeps=config.sweeps, pivot=config.pivot,
               rotation=config.rotation, angle=config.angle, tol=config.tol,
-              matmul_fn=config.matmul_fn())
+              matmul_fn=config.matmul_fn(),
+              fused=config.fused, fused_backend=config.backend)
     if op == "eigh":
         return lambda C, nr, nc: jacobi_eigh_batched(C, nr, **kw)
     if op == "svd":
-        return lambda A, nr, nc: jacobi_svd_batched(A, nr, nc, **kw)
+        return lambda A, nr, nc: jacobi_svd_batched(
+            A, nr, nc, precision=config.precision, **kw)
     if op == "pca":
         return lambda X, nr, nc: pca_fit_batched(X, nr, nc, config=config)
     raise ValueError(f"unknown op {op!r}")

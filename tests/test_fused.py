@@ -1,0 +1,190 @@
+"""Fused hot-path kernels: one-HBM-pass covariance and the one-launch
+Jacobi sweep step (ISSUE 9 tentpole).
+
+The contract under test is *bitwise* identity at fp32: the fused kernels
+reorder no floating-point operation relative to the unfused jitted path,
+so every assertion here is array_equal, not allclose.  Interpret mode
+stands in for the Pallas backend on CPU hosts (same lowering, same
+arithmetic); the ref backend is the plain-XLA oracle.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import PCAConfig, pca
+from repro.core.covariance import blocked_covariance
+from repro.core.jacobi import (cyclic_pairs, jacobi_eigh, round_robin_rounds)
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+
+
+def _data(m=64, n=12, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal((m, n)).astype(np.float32)
+
+
+def _sym(n=10, seed=0):
+    a = _data(n, n, seed)
+    return (a + a.T) / 2
+
+
+# ---------------------------------------------------------------------------
+# fused covariance
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(64, 12), (96, 8), (128, 16)])
+def test_covariance_interpret_matches_ref(shape):
+    x = _data(*shape)
+    got = kops.covariance(x, block_m=32, backend="interpret")
+    ref = kops.covariance(x, block_m=32, backend="ref")
+    np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-5)
+    assert got.dtype == jnp.float32
+
+
+def test_covariance_bitwise_vs_blocked_at_same_block():
+    """The fused streaming kernel accumulates panel Grams in the same
+    order as ``blocked_covariance`` at the same block_m -> bitwise."""
+    x = _data(128, 16, seed=1)
+    fused = blocked_covariance(x, block_m=32, fused=True,
+                               backend="interpret")
+    unfused = jax.jit(lambda a: blocked_covariance(a, block_m=32))(x)
+    np.testing.assert_array_equal(np.asarray(fused), np.asarray(unfused))
+
+
+@pytest.mark.parametrize("shape", [(5, 3), (33, 7), (1, 4)])
+def test_covariance_odd_shapes_pad_exactly(shape):
+    """Zero-row padding adds exact zeros to the Gram: odd shapes agree
+    with the plain oracle to fp32 roundoff."""
+    x = _data(*shape, seed=2)
+    got = kops.covariance(x, block_m=64, backend="interpret")
+    np.testing.assert_allclose(got, x.T @ x, rtol=1e-5, atol=1e-5)
+
+
+def test_covariance_normalize_divides_by_m_minus_1():
+    x = _data(64, 8, seed=3)
+    c = kops.covariance(x, block_m=32, backend="interpret", normalize=True)
+    ref = kops.covariance(x, block_m=32, backend="interpret") / 63.0
+    np.testing.assert_allclose(c, ref, rtol=1e-6)
+
+
+def test_covariance_bf16_within_budget():
+    from repro.core import precision as prec
+    x = _data(256, 16, seed=4)
+    lo = kops.covariance(x, block_m=64, backend="interpret",
+                         precision="bf16_fp32acc")
+    hi = kops.covariance(x, block_m=64, backend="ref")
+    assert lo.dtype == jnp.float32          # fp32 accumulator out
+    err = prec.rel_frobenius(np.asarray(lo), np.asarray(hi))
+    assert err < prec.ERROR_BUDGETS["bf16_fp32acc"]["covariance"]
+
+
+def test_covariance_vmaps():
+    xb = np.stack([_data(32, 6, seed=i) for i in range(3)])
+    got = jax.vmap(lambda x: kops.covariance(x, backend="interpret"))(xb)
+    ref = np.einsum("bij,bik->bjk", xb, xb)
+    np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# fused Jacobi sweep step
+# ---------------------------------------------------------------------------
+
+def _pair_sets(n):
+    rr = np.asarray(round_robin_rounds(n))      # parallel: disjoint pivots
+    cyc = np.asarray(cyclic_pairs(n))           # cyclic: one pivot per round
+    return {"parallel": rr[0], "cyclic": cyc[0],
+            "parallel_last": rr[-1], "cyclic_mid": cyc[len(cyc) // 2]}
+
+
+@pytest.mark.parametrize("angle", ["rutishauser", "atan2", "cordic"])
+@pytest.mark.parametrize("pairs_name",
+                         ["parallel", "cyclic", "parallel_last"])
+def test_sweep_step_bitwise_vs_ref(angle, pairs_name):
+    """One fused launch == the unfused gather/rotate chain, bitwise, for
+    every angle mode and both pivot-strategy pair shapes.  Both sides
+    jitted: that is how production runs them."""
+    n = 10
+    C = jnp.asarray(_sym(n, seed=5))
+    V = jnp.eye(n, dtype=jnp.float32)
+    pairs = jnp.asarray(_pair_sets(n)[pairs_name])
+    Cf, Vf = jax.jit(lambda c, v, p: kops.jacobi_sweep(
+        c, v, p, angle=angle, backend="interpret"))(C, V, pairs)
+    Cr, Vr = jax.jit(lambda c, v, p: kref.jacobi_sweep_step(
+        c, v, p, angle=angle))(C, V, pairs)
+    np.testing.assert_array_equal(np.asarray(Cf), np.asarray(Cr))
+    np.testing.assert_array_equal(np.asarray(Vf), np.asarray(Vr))
+
+
+def test_sweep_step_null_pivot_guard():
+    """A zero off-diagonal pivot must pass through as identity (the
+    padding-exactness guarantee the bucketed server leans on)."""
+    n = 8
+    C = jnp.zeros((n, n), jnp.float32).at[:4, :4].set(jnp.asarray(_sym(4)))
+    V = jnp.eye(n, dtype=jnp.float32)
+    pairs = jnp.asarray([[0, 1], [4, 5], [6, 7]], jnp.int32)  # 2 dead pivots
+    C2, V2 = kops.jacobi_sweep(C, V, pairs, backend="interpret")
+    np.testing.assert_array_equal(np.asarray(C2[4:]), 0.0)
+    np.testing.assert_array_equal(np.asarray(V2[4:, 4:]), np.eye(4))
+
+
+@pytest.mark.parametrize("pivot", ["parallel", "cyclic"])
+@pytest.mark.parametrize("angle", ["rutishauser", "cordic"])
+def test_jacobi_eigh_fused_bitwise(pivot, angle):
+    """Full solve, fused vs unfused, over all sweeps: bitwise."""
+    C = _sym(8, seed=7)
+    kw = dict(sweeps=6, pivot=pivot, angle=angle)
+    a = jacobi_eigh(C, fused=False, **kw)
+    b = jacobi_eigh(C, fused=True, fused_backend="interpret", **kw)
+    np.testing.assert_array_equal(np.asarray(a.eigenvalues),
+                                  np.asarray(b.eigenvalues))
+    np.testing.assert_array_equal(np.asarray(a.eigenvectors),
+                                  np.asarray(b.eigenvectors))
+
+
+def test_jacobi_eigh_fused_paper_pivot_falls_back():
+    """The paper max-pivot strategy has no fused kernel; fused=True must
+    silently take the unfused path and still be bitwise with fused=False."""
+    C = _sym(6, seed=8)
+    a = jacobi_eigh(C, sweeps=4, pivot="paper", fused=False)
+    b = jacobi_eigh(C, sweeps=4, pivot="paper", fused=True,
+                    fused_backend="interpret")
+    np.testing.assert_array_equal(np.asarray(a.eigenvalues),
+                                  np.asarray(b.eigenvalues))
+
+
+def test_jacobi_eigh_fused_converges():
+    C = _sym(12, seed=9)
+    res = jacobi_eigh(C, sweeps=12, fused=True, fused_backend="interpret")
+    w = np.sort(np.asarray(res.eigenvalues))
+    ref = np.sort(np.linalg.eigvalsh(C))
+    np.testing.assert_allclose(w, ref, rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end PCA threading
+# ---------------------------------------------------------------------------
+
+def test_pca_fit_fused_matches_unfused():
+    X = _data(96, 10, seed=10)
+    cfg = dict(sweeps=10, T=32)
+    ru = pca.fit(X, PCAConfig(**cfg))
+    rf = pca.fit(X, PCAConfig(fused=True, backend="interpret", **cfg))
+    np.testing.assert_allclose(np.asarray(ru.eigenvalues),
+                               np.asarray(rf.eigenvalues),
+                               rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(ru.cvcr), np.asarray(rf.cvcr),
+                               rtol=1e-4, atol=1e-6)
+
+
+def test_batched_pca_fused_vmaps():
+    from repro.serving import solver as S
+    Xb = np.stack([_data(64, 8, seed=i) for i in range(3)])
+    cfg = dict(sweeps=8, T=32)
+    bu = S.pca_fit_batched(Xb, config=PCAConfig(**cfg))
+    bf = S.pca_fit_batched(
+        Xb, config=PCAConfig(fused=True, backend="interpret", **cfg))
+    np.testing.assert_allclose(np.asarray(bu.eigenvalues),
+                               np.asarray(bf.eigenvalues),
+                               rtol=1e-4, atol=1e-6)

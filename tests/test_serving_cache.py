@@ -82,6 +82,31 @@ def test_solver_key_ignores_scheduling_facts():
     assert ka.backend == "interpret"      # engine tests key on k[3].backend
 
 
+def test_solver_key_carries_precision_and_fused():
+    """Mixed-precision policy and fused routing change the compiled
+    executable, so they must fragment the key -- unlike T/S."""
+    base = SolverKey.from_config(PCAConfig(T=8, S=2))
+    assert base.precision == "fp32" and base.fused is False
+    assert base != SolverKey.from_config(
+        PCAConfig(T=8, S=2, precision="bf16_fp32acc"))
+    assert base != SolverKey.from_config(PCAConfig(T=8, S=2, fused=True))
+    # content hash fragments with them too (the disk-tier file name)
+    h = lambda k: cache_mod.content_hash("pca", (8, 8), 2, k, None)
+    assert h(base) != h(SolverKey.from_config(
+        PCAConfig(T=8, S=2, precision="bf16_fp32acc")))
+
+
+def test_cache_format_bump_invalidates_disk_entries(monkeypatch):
+    """CACHE_FORMAT is key material: entries hashed under format N are
+    never looked up by a format N+1 server (clean miss, no load error)."""
+    key = SolverKey.from_config(PCAConfig(T=8, S=2))
+    new = cache_mod.content_hash("eigh", (8, 8), 2, key, None)
+    monkeypatch.setattr(cache_mod, "CACHE_FORMAT",
+                        cache_mod.CACHE_FORMAT - 1)
+    old = cache_mod.content_hash("eigh", (8, 8), 2, key, None)
+    assert new != old
+
+
 def test_local_executor_builds_each_solver_once(monkeypatch):
     """Regression for the rebuild-per-key bug: two batch sizes of one
     bucket used to re-build and re-trace an identical solver closure."""
@@ -142,6 +167,30 @@ def test_warmup_prebuilds_profile_executables():
     names = {e.get("name") for e in obs.trace_doc()["traceEvents"]}
     assert "warmup" in names
     assert "serve_warmup_executables_total" in obs.prometheus_text()
+
+
+def test_warmup_keys_ordered_by_descending_traffic_weight():
+    """SLO-aware warmup: the executables the profile says will be hit
+    most compile first, so an interrupted warmup has already armed the
+    highest-traffic paths.  Order is pinned: weight desc, then first
+    appearance."""
+    srv = _server(sweeps=2)
+    profile = TrafficProfile.from_shapes([
+        ("eigh", (6, 6), 2),       # bucket (8,8): 2 + 5 = 7 total
+        ("svd", (12, 6), 1),       # lone low-traffic shape
+        ("eigh", (5, 5), 5),       # folds onto the (8,8) eigh bucket
+        ("pca", (12, 6), 4),
+    ])
+    keys = srv.warmup_keys(profile)
+    assert [(k[0], k[1]) for k in keys] == [
+        ("eigh", (8, 8)),          # weight 7
+        ("pca", (16, 8)),          # weight 4
+        ("svd", (16, 8)),          # weight 1
+    ]
+    # bare (op, shape) rows (no counts) keep working: weight 1 each,
+    # insertion order preserved
+    bare = srv.warmup_keys([("svd", (12, 6)), ("eigh", (6, 6))])
+    assert [k[0] for k in bare] == ["svd", "eigh"]
 
 
 def test_apply_plan_prewarms_incoming_executables():
