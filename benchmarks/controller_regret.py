@@ -1,0 +1,285 @@
+"""Controller regret vs a clairvoyant re-tuner on a regime-shift trace,
+and the bandit's measured-evaluation pruning vs the exhaustive grid.
+
+Two claims, two suites:
+
+``regret``  A seeded open-loop trace shifts regime mid-stream (small
+    interactive matrices at moderate rate, then a long run of large
+    refits).  A ``ServingController``-steered server runs it under a
+    ``VirtualClock`` (analytic bandit, pinned cost model -- the whole
+    timeline is bit-deterministic), re-profiling every
+    ``REPROFILE_EVERY_S`` and hot-swapping behind hysteresis + dwell.
+    Regret is scored per ``SCORE_WINDOW_S`` window under ONE fixed
+    reference model:
+
+        regret_frac = sum_w (controller_w - oracle_w)
+                    / sum_w (default_w - oracle_w)
+
+    where ``oracle_w`` is the cost of the *per-regime* exhaustive-grid
+    best fixed plan (the clairvoyant re-tuner: it knows each regime's
+    aggregate traffic in advance and swaps exactly at the shift) and
+    ``default_w`` the static CLI-default plan -- so 0 is "adapted
+    instantly to each regime's best plan" and 1 is "never adapted at
+    all".  A per-*window* clairvoyant is not the comparator on purpose:
+    with a handful of requests per window its argmin flips on sampling
+    noise, and no causal policy can chase it (classic dynamic-regret
+    impossibility); best-fixed-plan-per-regime is the standard
+    achievable oracle.  The reference model zeroes the compile term --
+    swaps prewarm through ``apply_plan(warm_profile=...)``, so charging
+    every window a full cold compile would just reward never re-tuning.
+    The model is pinned (``ServingController(model=)``) so regret
+    measures *adaptation* (lag, hysteresis, dwell), not calibration
+    noise; the calibration path is exercised by tests/test_controller.py
+    and the serve_pca controller selftest leg.
+
+``prune``   ``bandit_search(measure=True)`` on a captured profile:
+    successive halving spends ``measured_evals`` real replay evaluations
+    (subsampled-fidelity rungs) where the exhaustive measured grid would
+    spend ``grid_size`` -- the measured fraction is the pruning claim.
+
+Acceptance (gated by ``scripts/check_bench.py`` on the committed
+``BENCH_controller_regret.json``): regret_frac <= 0.10, swaps <= 3,
+measured_evals <= 0.25 * grid_size.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+from repro.serving import (ControllerSpec, CostModel, ExecutionSpec,
+                           SchedulingSpec, ServerSpec, ServingController,
+                           ServingPlan, TenantSpec, TrafficFrontend,
+                           TrafficProfile, VirtualClock, bandit_search,
+                           build_server, generate, merge, plan_grid,
+                           profile_of, server_for_plan, synthetic_trace)
+
+from .common import emit, emit_json
+
+SEED = 0
+SCORE_WINDOW_S = 2.0                 # regret scoring granularity
+CTRL_WINDOW_S = 0.5                  # controller's trailing profile window
+REPROFILE_EVERY_S = 0.25
+HYSTERESIS = 0.05
+MIN_DWELL_S = 0.5
+# one fixed scoring function for oracle / default / controller alike -- a
+# modeled device slow enough that padding waste matters, with the compile
+# term zeroed (swaps prewarm; see module docstring), machine-independent
+REF_MODEL = CostModel(device_work_per_s=2e6, compile_s_per_executable=0.0)
+DEFAULT_PLAN = ServingPlan()         # the serve_pca CLI default tuple
+BUDGET_FRAC = 0.25
+
+
+def regime_shift_stream(n_small: int, n_big: int):
+    """Small interactive traffic, then a long run of large refits; the
+    big regime starts right after the small one ends.  Returns the
+    merged stream and the shift time."""
+    tenant = (TenantSpec("t0"),)
+    small = generate("poisson", rate=200.0, n=n_small, tenants=tenant,
+                     seed=5, trace="uniform", lo=8, hi=12)
+    shift_t = max(a.t for a in small) + 1e-3
+    big = [dataclasses.replace(a, t=a.t + shift_t) for a in
+           generate("poisson", rate=20.0, n=n_big, tenants=tenant,
+                    seed=9, trace="uniform", lo=28, hi=44)]
+    return merge(small, big), shift_t
+
+
+def _chunk_profile(chunk, span_s: float):
+    """Offered-load profile of an arrival chunk, normalized to its span
+    so plan costs are comparable across chunks."""
+    return dataclasses.replace(profile_of(chunk), duration_s=span_s,
+                               arrival_rate=len(chunk) / span_s)
+
+
+def regime_windows(stream, shift_t: float, window_s: float, grid):
+    """Score windows with the piecewise-static oracle plan attached.
+
+    Splits the stream at the regime shift, finds each regime's
+    exhaustive-grid best fixed plan on its *aggregate* profile, then
+    cuts each regime into fixed windows carrying that regime's oracle
+    plan.  Returns ``[(t0, t1, window_profile, oracle_plan)]``."""
+    t_end = max(a.t for a in stream) + 1e-9
+    out = []
+    for r0, r1 in ((0.0, shift_t), (shift_t, t_end)):
+        chunk = [a for a in stream if r0 <= a.t < r1]
+        regime_prof = _chunk_profile(chunk, r1 - r0)
+        oracle_plan = min(grid, key=lambda p:
+                          REF_MODEL.plan_cost(p, regime_prof)["total_s"])
+        t0 = r0
+        while t0 < r1:
+            t1 = min(t0 + window_s, r1)
+            wchunk = [a for a in chunk if t0 <= a.t < t1]
+            if wchunk:
+                out.append((t0, t1, _chunk_profile(wchunk, t1 - t0),
+                            oracle_plan))
+            t0 = t1
+    return out
+
+
+def plan_at(timeline, t: float) -> ServingPlan:
+    """The plan in force at time ``t`` on a [(t_swap, plan)] timeline."""
+    current = DEFAULT_PLAN
+    for ts, plan in timeline:
+        if ts <= t:
+            current = plan
+    return current
+
+
+def window_cost(timeline, t0: float, t1: float, prof) -> float:
+    """Time-weighted reference cost of the plans in force over [t0, t1)
+    -- a swap mid-window charges the old plan for its share, so slow
+    adaptation is penalized in proportion."""
+    cuts = sorted({t0, t1, *(ts for ts, _ in timeline if t0 < ts < t1)})
+    total = 0.0
+    for a, b in zip(cuts, cuts[1:]):
+        plan = plan_at(timeline, a)
+        total += (REF_MODEL.plan_cost(plan, prof)["total_s"]
+                  * (b - a) / (t1 - t0))
+    return total
+
+
+def run(fast: bool = True) -> None:
+    grid = plan_grid()
+    # regime B is long relative to the controller's adaptation lag
+    # (window fill + dwell), so steady-state windows dominate the sum
+    n_small, n_big = (400, 600) if fast else (400, 1200)
+    stream, shift_t = regime_shift_stream(n_small, n_big)
+
+    # -- regret suite -------------------------------------------------------
+    spec = ServerSpec(
+        scheduling=SchedulingSpec(T=16, max_batch=4, max_delay_s=0.02),
+        execution=ExecutionSpec(sweeps=6),
+        controller=ControllerSpec(enabled=True, window_s=CTRL_WINDOW_S,
+                                  reprofile_every_s=REPROFILE_EVERY_S,
+                                  hysteresis=HYSTERESIS,
+                                  min_dwell_s=MIN_DWELL_S))
+    srv = build_server(spec, clock=VirtualClock())
+    srv.controller.model = REF_MODEL     # pin the scoring function
+    srv.controller.grid = list(grid)
+    fe = TrafficFrontend(srv, (TenantSpec("t0"),), slo_ms=500.0,
+                         admission="none", model=REF_MODEL, seed=1)
+    srv.controller.frontend = fe
+    t0 = time.perf_counter()
+    rep = fe.run(stream, pace=False)
+    wall_s = time.perf_counter() - t0
+    ctrl = srv.controller
+
+    windows = regime_windows(stream, shift_t, SCORE_WINDOW_S, grid)
+    regret_num = 0.0
+    regret_den = 0.0
+    per_window = []
+    for w0, w1, prof, oracle_plan in windows:
+        oracle = REF_MODEL.plan_cost(oracle_plan, prof)["total_s"]
+        default = REF_MODEL.plan_cost(DEFAULT_PLAN, prof)["total_s"]
+        controller = window_cost(ctrl.plan_log, w0, w1, prof)
+        regret_num += controller - oracle
+        regret_den += default - oracle
+        per_window.append({
+            "t0": w0, "requests": prof.requests,
+            "oracle_s": oracle, "default_s": default,
+            "controller_s": controller,
+            "oracle_plan": oracle_plan.describe(),
+            "plan": plan_at(ctrl.plan_log, w1).describe()})
+    regret_frac = regret_num / regret_den if regret_den > 0 else 0.0
+
+    regret_row = {
+        "suite": "regret",
+        "scenario": "regime_shift",
+        "regret_frac": regret_frac,
+        "swaps": len(ctrl.swaps),
+        "ticks": ctrl.ticks,
+        "windows": len(windows),
+        "requests": len(stream),
+        "served": rep.served,
+        "controller_cost_s": regret_num + sum(w["oracle_s"]
+                                              for w in per_window),
+        "oracle_cost_s": sum(w["oracle_s"] for w in per_window),
+        "default_cost_s": sum(w["default_s"] for w in per_window),
+        "grid_size": len(grid),
+        "hysteresis": HYSTERESIS,
+        "min_dwell_s": MIN_DWELL_S,
+        "digest": rep.digest,
+        "wall_s": wall_s,
+    }
+    emit("controller_regret", f"{regret_frac:.4f}",
+         f"swaps={len(ctrl.swaps)};windows={len(windows)}"
+         f";acceptance: regret<=0.10, swaps<=3")
+
+    # -- prune suite --------------------------------------------------------
+    # capture a real profile of the big regime (the expensive one, where
+    # measuring matters), then let successive halving spend its budget
+    mats = synthetic_trace("bimodal", 48 if fast else 96, op="eigh",
+                           lo=8, hi=44, seed=SEED)
+    psrv = server_for_plan(DEFAULT_PLAN, srv.config)
+    for _ in range(2):                   # compile pass + steady-state pass
+        psrv.solve_many(mats)
+    profile = TrafficProfile.from_stats(psrv.stats,
+                                        captured=psrv.describe_plan())
+    t0 = time.perf_counter()
+    result = bandit_search(profile, grid=grid, budget_frac=BUDGET_FRAC,
+                           config=srv.config, seed=SEED, measure=True)
+    bandit_s = time.perf_counter() - t0
+    measured_frac = (result.measured_evals / result.grid_size
+                     if result.grid_size else 0.0)
+    prune_row = {
+        "suite": "prune",
+        "scenario": "bandit_prune",
+        "grid_size": result.grid_size,
+        "measured_evals": result.measured_evals,
+        "measured_frac": measured_frac,
+        "exhaustive_evals": result.grid_size,
+        "budget_frac": BUDGET_FRAC,
+        "best_plan": result.best.describe(),
+        "mode": result.mode,
+        "wall_s": bandit_s,
+    }
+    emit("controller_bandit_prune", f"{result.measured_evals}",
+         f"grid={result.grid_size};measured_frac={measured_frac:.3f}"
+         f";acceptance: measured<=0.25*grid")
+
+    emit_json("controller_regret", {
+        "score_window_s": SCORE_WINDOW_S,
+        "ctrl_window_s": CTRL_WINDOW_S,
+        "reprofile_every_s": REPROFILE_EVERY_S,
+        "ref_model_device_work_per_s": REF_MODEL.device_work_per_s,
+        "swap_log": [{"t": s["t"], "plan": s["plan"],
+                      "predicted_gain": s["predicted_gain"]}
+                     for s in ctrl.swaps],
+        "per_window": per_window,
+        "rows": [regret_row, prune_row],
+    })
+
+
+def selftest() -> int:
+    """CI smoke: the regime split must be well-formed and the analytic
+    bandit must agree with the exhaustive grid on a regime profile."""
+    import json
+
+    stream, shift_t = regime_shift_stream(60, 40)
+    grid = plan_grid()
+    windows = regime_windows(stream, shift_t, SCORE_WINDOW_S, grid)
+    assert len(windows) >= 2, len(windows)
+    assert all(w1 > w0 and prof.requests > 0
+               for w0, w1, prof, _ in windows)
+    result = bandit_search(windows[-1][2], grid=grid, model=REF_MODEL,
+                           budget_frac=BUDGET_FRAC, measure=False)
+    exhaustive = min(grid, key=lambda p:
+                     REF_MODEL.plan_cost(p, windows[-1][2])["total_s"])
+    assert result.best == exhaustive, (result.best, exhaustive)
+    print("controller_regret selftest ok:", json.dumps({
+        "windows": len(windows), "grid": len(grid),
+        "analytic_best": result.best.describe()}))
+    return 0
+
+
+if __name__ == "__main__":
+    import argparse
+    import sys
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--selftest", action="store_true")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    if args.selftest:
+        sys.exit(selftest())
+    print("name,us_per_call,derived")
+    run(fast=not args.full)

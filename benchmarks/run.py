@@ -14,6 +14,8 @@ Prints ``name,us_per_call,derived`` CSV.
   autotune -- tuned-vs-default serving-plan gain (serving.autotune)
   cold_start -- fresh-replica TTFR: cold JIT vs warm disk cache vs warmup
   goodput -- open-loop goodput-under-SLO vs offered load (serving.frontend)
+  controller -- controller regret vs oracle on a regime shift, plus the
+                bandit's measured-eval pruning (serving.controller)
 """
 import argparse
 import sys
@@ -28,10 +30,10 @@ def main() -> None:
                     help="larger sweeps (slow on CPU)")
     args = ap.parse_args()
 
-    from . import (autotune_gain, cold_start, dse, fig1_bottlenecks,
-                   fig6_exec_time, fig7_energy, fig8_frobenius, goodput,
-                   perf_variants, roofline, serve_throughput,
-                   table3_configs)
+    from . import (autotune_gain, cold_start, controller_regret, dse,
+                   fig1_bottlenecks, fig6_exec_time, fig7_energy,
+                   fig8_frobenius, goodput, perf_variants, roofline,
+                   serve_throughput, table3_configs)
     suite = {
         "table3": table3_configs,
         "fig8": fig8_frobenius,
@@ -45,6 +47,7 @@ def main() -> None:
         "autotune": autotune_gain,
         "cold_start": cold_start,
         "goodput": goodput,
+        "controller": controller_regret,
     }
     only = set(args.only.split(",")) if args.only else None
     print("name,us_per_call,derived")

@@ -72,6 +72,8 @@ METRIC_PREFERENCE = (
     ("mm_engine_us", False),
     ("dle_scan_us", False),
     ("us_per_call", False),
+    ("regret_frac", False),
+    ("measured_frac", False),
 )
 
 
@@ -342,6 +344,60 @@ def roofline_gate(name: str, doc: dict, tol: float) -> tuple[list, bool]:
     return [header] + lines, ok
 
 
+def controller_gate(name: str, doc: dict, tol: float) -> tuple[list, bool]:
+    """Intra-file invariants for BENCH_controller_regret.json (the
+    autonomous-controller acceptance, machine-independent: the regret
+    timeline runs under a virtual clock against a pinned cost model):
+
+      regret   every suite="regret" row must hold regret_frac <= 0.10 --
+               the controller captures >= 90% of the clairvoyant
+               re-tuner's advantage over the static default plan.  The
+               tolerance is multiplicative slack on the ceiling.
+      thrash   the same rows must show swaps <= 3: adaptation, not
+               oscillation.  No slack -- swap counts are deterministic.
+      prune    every suite="prune" row must hold measured_evals <=
+               budget_frac * grid_size (the successive-halving bandit's
+               whole point vs the exhaustive measured grid).  No slack --
+               eval counts are deterministic."""
+    lines, ok, checked = [], True, 0
+    for _, r in iter_rows(doc):
+        suite = r.get("suite")
+        if suite == "regret" and isinstance(r.get("regret_frac"),
+                                            (int, float)):
+            checked += 1
+            regret = float(r["regret_frac"])
+            ceiling = 0.10 * (1.0 + tol)
+            verdict = "ok"
+            if regret > ceiling:
+                verdict, ok = "HIGH-REGRET", False
+            lines.append(f"  {verdict:<13} regret[{r.get('scenario')}] "
+                         f"{regret:.4f} (ceiling {ceiling:.4f})")
+            swaps = r.get("swaps")
+            if isinstance(swaps, int):
+                verdict = "ok"
+                if swaps > 3:
+                    verdict, ok = "THRASHING", False
+                lines.append(f"  {verdict:<13} swaps[{r.get('scenario')}] "
+                             f"{swaps} (max 3)")
+        elif suite == "prune" and isinstance(r.get("measured_evals"), int):
+            checked += 1
+            grid = int(r.get("grid_size", 0))
+            budget = float(r.get("budget_frac", 0.25))
+            cap = int(budget * grid)
+            verdict = "ok"
+            if grid and r["measured_evals"] > cap:
+                verdict, ok = "NO-PRUNING", False
+            lines.append(f"  {verdict:<13} prune[{r.get('scenario')}] "
+                         f"{r['measured_evals']} measured evals vs "
+                         f"grid {grid} (cap {cap})")
+    if not checked:
+        return [f"{name}: no gateable rows; controller gate skipped"], True
+    header = (f"{name}: controller gate (regret <= 0.10 with "
+              f"{tol * 100:.0f}% slack; swaps <= 3; measured evals <= "
+              f"budget_frac * grid)")
+    return [header] + lines, ok
+
+
 def compare_file(name: str, tol: float) -> tuple[list, bool]:
     """Returns (report lines, ok)."""
     fresh_path = REPO_ROOT / name
@@ -364,6 +420,9 @@ def compare_file(name: str, tol: float) -> tuple[list, bool]:
     elif name == "BENCH_roofline.json":
         extra_lines, extra_ok = roofline_gate(name, json.loads(fresh_text),
                                               tol)
+    elif name == "BENCH_controller_regret.json":
+        extra_lines, extra_ok = controller_gate(name,
+                                                json.loads(fresh_text), tol)
     base_text = committed_copy(name)
     if base_text is None:
         return ([f"{name}: not in HEAD (new benchmark); diff skipped"]

@@ -14,7 +14,12 @@
 #      an async-pipeline leg (sync-vs-async bit-for-bit parity on a mixed
 #      burst, in-flight depth telemetry > 1) and a cold-start leg (a
 #      replica seeds a --cache-dir, a fresh replica warms every
-#      executable from disk with zero compiles, bit-for-bit parity);
+#      executable from disk with zero compiles, bit-for-bit parity) and
+#      a spec leg (ServerSpec JSON round trip, spec-vs-kwarg
+#      construction parity, the kwarg-soup deprecation shim) and a
+#      controller leg (a regime-shift stream under a virtual clock:
+#      deterministic swaps, dwell guard respected, recalibrated cost
+#      model pushed into the frontend's admission controller);
 #      runs in both matrix jobs
 #   3. backend-sweep smoke  -- one sweep point: a router splits two buckets
 #      across two kernel backends in one server, verified against numpy

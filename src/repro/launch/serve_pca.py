@@ -40,6 +40,18 @@ their own schedule and the report is goodput under the SLO, per tenant):
       --rate 200 --requests 256 --tenants "whale:0.9,mouse:0.1" \
       --scheduler wfq --admission shed --slo-ms 50
 
+Autonomous control (the controller re-profiles a sliding telemetry
+window, bandit-searches the plan grid, and hot-swaps behind hysteresis +
+dwell guards -- --autotune's one-shot search, closed into a loop):
+  PYTHONPATH=src python -m repro.launch.serve_pca --arrivals poisson \
+      --rate 200 --requests 256 --controller on --reprofile-every 1 \
+      --hysteresis 0.1 --slo-ms 50
+
+Spec files (every construction flag resolves into one frozen ServerSpec;
+--spec builds from a saved JSON instead, and conflicts with any explicit
+construction flag -- the error names the clash):
+  PYTHONPATH=src python -m repro.launch.serve_pca --spec server.json
+
 CI smoke (exercises submit/flush/cache + checks results against numpy;
 includes a sharded-flush parity leg over every visible device, an
 async-pipeline leg -- a mixed burst must match the synchronous engine
@@ -49,7 +61,10 @@ to the default plan, and a mid-stream ``apply_plan`` hot-swap must be
 bit-identical to a cold server built with the plan; plus a frontend leg:
 a seeded open-loop run under a virtual clock must be bit-identical across
 two invocations -- same admitted/shed split, same result bytes -- and WFQ
-must bound the starved tenant's p99 where FIFO does not):
+must bound the starved tenant's p99 where FIFO does not; plus a spec leg:
+ServerSpec JSON round trip + spec-vs-kwarg construction parity + the
+deprecation shim; plus a controller leg: a regime-shift stream must drive
+deterministic, dwell-guarded hot-swaps with admission feedback):
   PYTHONPATH=src python -m repro.launch.serve_pca --selftest
 """
 from __future__ import annotations
@@ -58,6 +73,7 @@ import argparse
 import dataclasses
 import json
 import sys
+import warnings
 
 import numpy as np
 
@@ -65,11 +81,14 @@ from repro.core import PCAConfig
 from repro.core.memory_model import VIRTEX_US
 from repro.obs import Observability, device_profile, validate_trace
 from repro.serving import (ADMISSION_MODES, ARRIVALS, BucketPolicy,
-                           CostModel, PCAServer, POLICIES, SCHEDULERS,
-                           TenantSpec, TrafficFrontend, TrafficProfile,
-                           VirtualClock, aot_supported, autotune, generate,
-                           materialize, merge, mesh_executor, parse_tenants,
-                           plan_grid, profile_of, server_for_plan)
+                           CacheSpec, ControllerSpec, CostModel,
+                           ExecutionSpec, ObsSpec, PCAServer, POLICIES,
+                           SCHEDULERS, SchedulingSpec, ServerSpec,
+                           SpecConflictError, TenantSpec, TrafficFrontend,
+                           TrafficProfile, VirtualClock, aot_supported,
+                           autotune, build_server, generate, materialize,
+                           merge, mesh_executor, parse_tenants, plan_grid,
+                           profile_of, resolve_spec, server_for_plan)
 from repro.serving.autotune import synthesize
 
 
@@ -114,11 +133,16 @@ def selftest() -> int:
     assert summary["mean_batch"] == 4.0, summary
 
     # sharded leg: the same eigh traffic through a mesh over every visible
-    # device must match numpy too (degrades to a 1-device mesh gracefully)
-    ex = mesh_executor("auto")
-    sharded = PCAServer(PCAConfig(T=8, S=4, sweeps=14),
-                        policy=BucketPolicy(T=8), max_delay_s=10.0,
-                        executor=ex)
+    # device must match numpy too (degrades to a 1-device mesh gracefully).
+    # From here on, multi-kwarg servers are built through the spec API --
+    # the legs double as spec-vs-kwarg parity checks, since every result
+    # is compared against the kwarg-built ``srv``
+    base_spec = ServerSpec(
+        scheduling=SchedulingSpec(T=8, max_batch=4, max_delay_s=10.0),
+        execution=ExecutionSpec(sweeps=14))
+    sharded = PCAServer.from_spec(dataclasses.replace(
+        base_spec, execution=ExecutionSpec(mesh="auto", sweeps=14)))
+    ex = sharded.executor
     for m, r in zip(mats, sharded.solve_many(mats, op="eigh")):
         ref = np.linalg.eigh(m)[0][::-1]
         np.testing.assert_allclose(r.eigenvalues, ref, rtol=1e-3, atol=1e-3)
@@ -130,9 +154,9 @@ def selftest() -> int:
     # *bit-for-bit* -- the pipeline only reorders work, it runs the
     # identical cached executables on identical slabs -- while the depth
     # telemetry proves flushes really were in flight together
-    pipelined = PCAServer(PCAConfig(T=8, S=4, sweeps=14),
-                          policy=BucketPolicy(T=8), max_delay_s=10.0,
-                          max_inflight=4)
+    pipelined = PCAServer.from_spec(dataclasses.replace(
+        base_spec, scheduling=dataclasses.replace(base_spec.scheduling,
+                                                  max_inflight=4)))
     for op, traffic in (("eigh", mats), ("svd", svd_in)):
         got = pipelined.solve_many(traffic, op=op)
         want = srv.solve_many(traffic, op=op)
@@ -191,10 +215,12 @@ def selftest() -> int:
     # math), the exported trace must pass the Chrome-schema validator
     # with every request span parented to a flush span, and the metric
     # export must carry the per-(op, bucket, backend) latency series
-    obs = Observability.enabled(slo_ms=1000.0)
-    traced = PCAServer(PCAConfig(T=8, S=4, sweeps=14),
-                       policy=BucketPolicy(T=8), max_delay_s=10.0,
-                       obs=obs, clock=obs.clock, max_inflight=2)
+    traced = PCAServer.from_spec(dataclasses.replace(
+        base_spec,
+        scheduling=dataclasses.replace(base_spec.scheduling,
+                                       max_inflight=2),
+        obs=ObsSpec(slo_ms=1000.0)))
+    obs = traced.obs
     for op, traffic in (("eigh", mats), ("svd", svd_in)):
         got = traced.solve_many(traffic, op=op)
         want = srv.solve_many(traffic, op=op)
@@ -234,16 +260,14 @@ def selftest() -> int:
             [("eigh", m.shape, 1) for m in mats]
             + [("svd", a.shape, 1) for a in svd_in])
         with tempfile.TemporaryDirectory() as cdir:
-            seeder = PCAServer(PCAConfig(T=8, S=4, sweeps=14),
-                               policy=BucketPolicy(T=8), max_delay_s=10.0,
-                               cache_dir=cdir)
+            cache_spec = dataclasses.replace(
+                base_spec, cache=CacheSpec(cache_dir=cdir))
+            seeder = PCAServer.from_spec(cache_spec)
             seeded = seeder.warmup(seed_profile)
             assert seeded["compile"] == seeded["executables"], seeded
             stores = seeder.cache_summary()["disk"]["stores"]
             assert stores == seeded["executables"], seeder.cache_summary()
-            warm = PCAServer(PCAConfig(T=8, S=4, sweeps=14),
-                             policy=BucketPolicy(T=8), max_delay_s=10.0,
-                             cache_dir=cdir)
+            warm = PCAServer.from_spec(cache_spec)
             warmed = warm.warmup(seed_profile)
             assert warmed["disk"] == warmed["executables"], warmed
             assert warmed["compile"] == 0, warmed
@@ -277,11 +301,12 @@ def selftest() -> int:
         generate("poisson", rate=30.0, n=15, tenants=(mouse,), seed=11,
                  trace="uniform", lo=8, hi=12))
     fe_model = CostModel(device_work_per_s=2e6)   # modeled slow device
+    open_spec = ServerSpec(
+        scheduling=SchedulingSpec(T=16, max_batch=8, max_delay_s=0.02),
+        execution=ExecutionSpec(sweeps=6))
 
     def open_loop(scheduler, admission):
-        fsrv = PCAServer(PCAConfig(T=16, S=8, sweeps=6),
-                         policy=BucketPolicy(T=16), clock=VirtualClock(),
-                         max_delay_s=0.02, max_batch=8)
+        fsrv = build_server(open_spec, clock=VirtualClock())
         fe = TrafficFrontend(fsrv, (whale, mouse), slo_ms=100.0,
                              scheduler=scheduler, admission=admission,
                              model=fe_model, seed=1)
@@ -298,6 +323,68 @@ def selftest() -> int:
     fifo_p99 = fifo_rep.per_tenant["mouse"]["latency_p99_ms"]
     assert wfq_p99 < 0.5 * fifo_p99, \
         f"WFQ did not bound the starved tenant: {wfq_p99} vs {fifo_p99}"
+
+    # spec leg: the frozen ServerSpec must survive its JSON round trip
+    # exactly, a spec-built server must serve the burst bit-identical to
+    # the kwarg-built one (several legs above already ran on from_spec
+    # servers against ``srv``), and legacy multi-kwarg construction must
+    # point at the spec API with a DeprecationWarning
+    spec_rt = dataclasses.replace(base_spec, controller=ControllerSpec(
+        enabled=True, window_s=1.0, reprofile_every_s=0.25,
+        hysteresis=0.02, min_dwell_s=0.5))
+    assert ServerSpec.from_json(spec_rt.to_json()) == spec_rt
+    spec_srv = PCAServer.from_spec(base_spec)
+    for g, w in zip(spec_srv.solve_many(mats, op="eigh"),
+                    srv.solve_many(mats, op="eigh")):
+        for field in (f.name for f in dataclasses.fields(g)):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(g, field)), np.asarray(getattr(w, field)),
+                err_msg=f"spec-vs-kwarg eigh.{field}")
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        PCAServer(PCAConfig(T=8, S=4, sweeps=14), policy=BucketPolicy(T=8),
+                  max_delay_s=10.0, max_inflight=2)
+    assert any(issubclass(w.category, DeprecationWarning) for w in caught), \
+        "multi-kwarg PCAServer construction must DeprecationWarn"
+
+    # controller leg: a regime shift (small interactive traffic, then a
+    # flood of large refits) under a virtual clock.  The controller must
+    # be bit-deterministic across invocations (same swaps at the same
+    # virtual times, same result digest), actually adapt (>= 1 hot-swap),
+    # respect the dwell guard between swaps, and push the recalibrated
+    # cost model into the frontend's admission controller
+    ctrl_spec = ServerSpec(
+        scheduling=SchedulingSpec(T=16, max_batch=4, max_delay_s=0.02),
+        execution=ExecutionSpec(sweeps=6),
+        controller=ControllerSpec(enabled=True, window_s=1.0,
+                                  reprofile_every_s=0.25, hysteresis=0.02,
+                                  min_dwell_s=0.5))
+    shift_stream = merge(
+        generate("poisson", rate=80.0, n=80, tenants=(whale,), seed=5,
+                 trace="uniform", lo=8, hi=12),
+        [dataclasses.replace(a, t=a.t + 1.5) for a in
+         generate("poisson", rate=300.0, n=150, tenants=(whale,), seed=9,
+                  trace="uniform", lo=28, hi=44)])
+
+    def controlled_run():
+        csrv = build_server(ctrl_spec, clock=VirtualClock())
+        fe = TrafficFrontend(csrv, (whale,), slo_ms=200.0,
+                             admission="none", model=fe_model, seed=1)
+        csrv.controller.frontend = fe
+        rep = fe.run(shift_stream, pace=False)
+        return csrv, fe, rep
+
+    csrv_a, cfe_a, crep_a = controlled_run()
+    csrv_b, _, crep_b = controlled_run()
+    ctrl = csrv_a.controller
+    assert crep_a.digest == crep_b.digest, "controller run not deterministic"
+    assert ([round(s["t"], 9) for s in ctrl.swaps]
+            == [round(s["t"], 9) for s in csrv_b.controller.swaps])
+    assert len(ctrl.swaps) >= 1, ctrl.summary()
+    for s1, s2 in zip(ctrl.swaps, ctrl.swaps[1:]):
+        assert s2["t"] - s1["t"] >= ctrl.min_dwell_s - 1e-9, ctrl.swaps
+    assert cfe_a.model is not fe_model, \
+        "swap did not feed the recalibrated cost model back to admission"
 
     print("serve_pca selftest ok:",
           json.dumps({k: round(v, 4) for k, v in summary.items()}))
@@ -321,10 +408,16 @@ def selftest() -> int:
         "shed": rep_a.shed, "digest": rep_a.digest[:12],
         "mouse_p99_ms": {"wfq": round(wfq_p99, 1),
                          "fifo": round(fifo_p99, 1)}}))
+    print("serve_pca spec selftest ok:", json.dumps({
+        "round_trip": True, "parity": True, "deprecation_warns": True}))
+    print("serve_pca controller selftest ok:", json.dumps({
+        "ticks": ctrl.ticks, "swaps": len(ctrl.swaps),
+        "first_swap_t": round(ctrl.swaps[0]["t"], 3),
+        "plan": ctrl.swaps[-1]["plan"], "digest": crep_a.digest[:12]}))
     return 0
 
 
-def open_loop_run(args, srv, obs, dims) -> int:
+def open_loop_run(args, srv, obs, dims, spec) -> int:
     """Open-loop mode: seeded paced arrivals through the traffic frontend
     (fairness + admission) instead of the closed-loop burst."""
     tenants = parse_tenants(args.tenants)
@@ -354,19 +447,24 @@ def open_loop_run(args, srv, obs, dims) -> int:
         obs.tracer.clear()
         if obs.slo is not None:
             obs.slo.reset()
-    fe = TrafficFrontend(srv, tenants, slo_ms=args.slo_ms,
+    fe = TrafficFrontend(srv, tenants, slo_ms=spec.obs.slo_ms,
                          scheduler=args.scheduler, admission=args.admission,
                          model=model, degrade_frac=args.degrade_frac,
                          accounting=accounting, seed=args.seed)
+    if srv.controller is not None:
+        # the controller's admission feedback path: after a swap, this
+        # frontend's cost model is recalibrated to the new plan
+        srv.controller.frontend = fe
     rep = fe.run(stream, pace=True)
     obs_info = None
     if obs is not None:
         accounting.summary(span_s=rep.duration_s)  # refresh goodput gauges
         obs_info = obs.summary()
-        if args.trace_out:
-            obs_info["trace_out"] = str(obs.save_trace(args.trace_out))
-        if args.metrics_out:
-            obs_info["metrics_out"] = str(obs.save_metrics(args.metrics_out))
+        if spec.obs.trace_out:
+            obs_info["trace_out"] = str(obs.save_trace(spec.obs.trace_out))
+        if spec.obs.metrics_out:
+            obs_info["metrics_out"] = str(
+                obs.save_metrics(spec.obs.metrics_out))
     print(json.dumps({
         "op": args.op,
         "arrivals": args.arrivals,
@@ -374,8 +472,10 @@ def open_loop_run(args, srv, obs, dims) -> int:
         "tenants": [dataclasses.asdict(t) for t in tenants],
         "scheduler": args.scheduler,
         "admission": args.admission,
-        "slo_ms": args.slo_ms,
+        "slo_ms": spec.obs.slo_ms,
         "plan": srv.describe_plan(),
+        "controller": (srv.controller.summary()
+                       if srv.controller is not None else None),
         "profile": {"requests": profile.requests,
                     "arrival_rate": profile.arrival_rate,
                     "duration_s": profile.duration_s},
@@ -484,6 +584,30 @@ def main(argv=None) -> int:
                          "around the timed pass (TensorBoard/"
                          "Perfetto-loadable); no-op if the jax build "
                          "lacks profiler support")
+    ap.add_argument("--spec", default=None, metavar="JSON",
+                    help="build the server from a ServerSpec JSON file "
+                         "(ServerSpec.to_json / `serve_pca ... --spec-out`-"
+                         "less: write one with serving.ServerSpec.save). "
+                         "Mutually exclusive with every construction flag "
+                         "the spec owns -- conflicts error with the flag "
+                         "and the spec fact named")
+    ap.add_argument("--controller", default="off", choices=("off", "on"),
+                    help="run the autonomous serving controller: "
+                         "re-profile a sliding telemetry window every "
+                         "--reprofile-every seconds, bandit-search the "
+                         "plan grid, and hot-swap when the predicted gain "
+                         "clears --hysteresis (anti-thrash: --min-dwell). "
+                         "Owns plan search, so conflicts with --autotune")
+    ap.add_argument("--profile-window", type=float, default=5.0,
+                    help="controller: sliding re-profile window, seconds "
+                         "of trailing traffic")
+    ap.add_argument("--reprofile-every", type=float, default=1.0,
+                    help="controller: tick cadence on the engine clock")
+    ap.add_argument("--hysteresis", type=float, default=0.15,
+                    help="controller: minimum predicted fractional gain "
+                         "before a hot-swap is applied")
+    ap.add_argument("--min-dwell", type=float, default=2.0,
+                    help="controller: minimum seconds between swaps")
     ap.add_argument("--selftest", action="store_true",
                     help="run the 2-second smoke and exit")
     args = ap.parse_args(argv)
@@ -491,28 +615,26 @@ def main(argv=None) -> int:
     if args.selftest:
         return selftest()
 
+    # every construction flag resolves through the spec layer: one frozen
+    # ServerSpec is the single source of truth, whether it came from the
+    # flags or a --spec file, and conflicting flag combinations error here
+    # with the clash named instead of last-write-winning
+    try:
+        spec = resolve_spec(args, vars(ap.parse_args([])))
+    except SpecConflictError as e:
+        print(f"serve_pca: {e}", file=sys.stderr)
+        return 2
     dims = [int(d) for d in args.dims.split(",")]
-    config = PCAConfig(T=args.tile, S=args.max_batch, sweeps=args.sweeps)
-    executor = mesh_executor(args.mesh)
-    want_obs = (args.trace_out or args.metrics_out
-                or args.slo_ms is not None or args.jax_profile)
-    obs = Observability.enabled(slo_ms=args.slo_ms) if want_obs else None
-    srv = PCAServer(config, policy=BucketPolicy(T=args.tile,
-                                                mode=args.bucket_policy),
-                    max_batch=args.max_batch,
-                    max_delay_s=args.timeout_ms / 1e3,
-                    executor=executor,
-                    max_inflight=args.inflight,
-                    obs=obs,
-                    cache_dir=args.cache_dir,
-                    **({"clock": obs.clock} if obs is not None else {}))
+    srv = build_server(spec)
+    obs, config, executor = srv.obs, srv.config, srv.executor
     if args.arrivals:
-        return open_loop_run(args, srv, obs, dims)
+        return open_loop_run(args, srv, obs, dims, spec)
     warmup_info = None
-    if args.warmup:
+    if spec.cache.warmup_profile:
         # pre-build the profile's executables before the first request --
         # with a warm --cache-dir this is a disk load, not a compile
-        warmup_info = srv.warmup(TrafficProfile.load(args.warmup))
+        warmup_info = srv.warmup(
+            TrafficProfile.load(spec.cache.warmup_profile))
     mats = mixed_traffic(args.requests, args.op, dims, args.seed)
     srv.solve_many(mats, op=args.op)       # warmup: compile the buckets
     # the warmup pass doubles as the profiling pass: its telemetry is the
@@ -530,8 +652,8 @@ def main(argv=None) -> int:
         # the CLI's mesh choice joins the executor axis of the grid, so a
         # requested mesh is kept unless the tuner finds single-device
         # genuinely better -- never silently dropped
-        meshes = (("none",) if args.mesh in ("none", "local")
-                  else ("none", args.mesh))
+        mesh = spec.execution.mesh
+        meshes = ("none",) if mesh in ("none", "local") else ("none", mesh)
         result = autotune(
             profile, grid=plan_grid(meshes=meshes), config=config,
             measure_top_k=(args.measure_top_k
@@ -549,7 +671,7 @@ def main(argv=None) -> int:
         obs.tracer.clear()
         if obs.slo is not None:
             obs.slo.reset()
-    with device_profile(args.jax_profile):
+    with device_profile(spec.obs.jax_profile):
         srv.solve_many(mats, op=args.op)
     summary = srv.stats.summary()
     pvm = srv.stats.predicted_vs_measured(VIRTEX_US)
@@ -557,19 +679,18 @@ def main(argv=None) -> int:
     obs_info = None
     if obs is not None:
         obs_info = obs.summary()
-        if args.trace_out:
-            obs_info["trace_out"] = str(obs.save_trace(args.trace_out))
-        if args.metrics_out:
-            obs_info["metrics_out"] = str(obs.save_metrics(args.metrics_out))
+        if spec.obs.trace_out:
+            obs_info["trace_out"] = str(obs.save_trace(spec.obs.trace_out))
+        if spec.obs.metrics_out:
+            obs_info["metrics_out"] = str(
+                obs.save_metrics(spec.obs.metrics_out))
     print(json.dumps({
         "op": args.op,
-        "config": {"T": args.tile, "S": args.max_batch,
-                   "policy": args.bucket_policy,
-                   "timeout_ms": args.timeout_ms,
-                   "executor": executor.describe(),
-                   "max_inflight": args.inflight},
+        "spec": json.loads(spec.to_json()),
         "plan": srv.describe_plan(),
         "autotune": tune_info,
+        "controller": (srv.controller.summary()
+                       if srv.controller is not None else None),
         "warmup": warmup_info,
         "cache": srv.cache_summary(),
         "obs": obs_info,

@@ -371,6 +371,30 @@ class MetricRegistry:
                     }
         return doc
 
+    def series_events(self, name: str, window_s: Optional[float] = None,
+                      now: Optional[float] = None
+                      ) -> List[Tuple[Dict[str, str],
+                                      List[Tuple[float, float]]]]:
+        """Raw windowed events of one family, with *structured* labels.
+
+        ``snapshot`` keys children by a comma-joined label string -- fine
+        for JSON eyeballs, lossy for programs.  This accessor returns
+        ``[(labels_dict, [(t, value), ...]), ...]`` per child so the
+        sliding-window re-profiler (``TrafficProfile.from_registry``) can
+        recover (op, bucket) tuples without string parsing.  Children are
+        in sorted label order; an unknown family is an empty list, and an
+        empty window is an empty event list per child (the child itself is
+        still reported, which is what lets the re-profiler distinguish
+        "series went quiet" from "series never existed").
+        """
+        self._collect()
+        now = self.clock() if now is None else now
+        fam = self._families.get(name)
+        if fam is None:
+            return []
+        return [(dict(zip(fam.labelnames, key)), child.window(now, window_s))
+                for key, child in fam.items()]
+
     def to_json(self) -> Dict:
         """Lifetime snapshot as a plain dict (JSON-clean: NaN-free)."""
         doc = self.snapshot(window_s=None)

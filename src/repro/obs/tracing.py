@@ -192,7 +192,10 @@ class Tracer:
     # -- export -------------------------------------------------------------
     def export(self, process_name: str = "repro.serving") -> Dict:
         """The ring's spans as a Chrome trace-event JSON document."""
-        spans = sorted(self.spans, key=lambda s: (s.ts, -s.dur))
+        # ties broken by id: a parent reserves its id before its children
+        # record (new_id), so on a frozen test clock -- every ts equal --
+        # parents still lane-assign before the children that ride them
+        spans = sorted(self.spans, key=lambda s: (s.ts, -s.dur, s.id))
         by_id = {s.id: s for s in spans}
         t0 = min((s.ts for s in spans), default=0.0)
 
@@ -204,7 +207,8 @@ class Tracer:
         lanes_per_track: Dict[str, List[float]] = {t: [] for t in tracks}
         for s in spans:
             parent = by_id.get(s.parent) if s.parent is not None else None
-            if parent is not None and parent.track == s.track:
+            if (parent is not None and parent.track == s.track
+                    and parent.id in lane_of):
                 lane_of[s.id] = lane_of[parent.id]
                 continue
             busy = lanes_per_track[s.track]

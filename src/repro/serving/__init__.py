@@ -20,15 +20,24 @@ captured ``TrafficProfile`` and hot-swaps onto a live server via
 disk tier of serialized AOT executables, so a fresh replica pointed at a
 warm ``cache_dir`` -- or pre-built via ``PCAServer.warmup(profile)`` --
 serves its first request without ever touching XLA.
+
+Configuration is one frozen ``spec.ServerSpec`` (scheduling / execution /
+cache / obs / controller sub-specs): ``PCAServer.from_spec(spec)`` builds
+the whole stack, ``ServerSpec.from_args`` maps the CLI onto it, and
+``to_json``/``from_json`` round-trip it for config files.  The
+``controller.ServingController`` closes the autotune loop autonomously:
+re-profile a sliding telemetry window, bandit-search the plan grid, and
+hot-swap behind hysteresis + dwell guards.
 """
 from .autotune import (AutotuneResult, CostModel, ServingPlan,
-                       TrafficProfile, TRACE_KINDS, autotune, plan_grid,
-                       replay, server_for_plan, solve_work, synthetic_trace,
-                       trace_dims)
+                       TrafficProfile, TRACE_KINDS, autotune, bandit_search,
+                       plan_grid, replay, server_for_plan, solve_work,
+                       subsample, synthetic_trace, trace_dims)
 from .batching import (BucketPolicy, POLICIES, pad_to_bucket, padding_waste,
                        stack_requests)
 from .cache import (DiskCache, ExecutableCache, LRUCache, SolverKey,
                     aot_supported, content_hash, environment_fingerprint)
+from .controller import ServingController
 from .engine import (BackendRouter, OPS, PCAServer, ServedEigh, ServedPCA,
                      ServedSVD, Ticket, threshold_router)
 from .frontend import (ADMISSION_MODES, ARRIVALS, AdmissionController,
@@ -39,6 +48,9 @@ from .frontend import (ADMISSION_MODES, ARRIVALS, AdmissionController,
                        profile_of)
 from .inflight import InFlightFlush, InFlightQueue
 from .sharded import LocalExecutor, MeshExecutor, host_mesh, mesh_executor
+from .spec import (CacheSpec, ControllerSpec, ExecutionSpec, ObsSpec,
+                   SchedulingSpec, ServerSpec, SpecConflictError,
+                   build_server, resolve_spec, validate_args)
 from .solver import (BatchedEighResult, BatchedPCAResult, BatchedSVDResult,
                      build_solver_fn, jacobi_eigh_batched,
                      jacobi_svd_batched, pca_fit_batched,
@@ -52,16 +64,20 @@ __all__ = [
     "VirtualClock", "arrival_times", "generate", "materialize", "merge",
     "parse_tenants", "profile_of",
     "AutotuneResult", "BackendRouter", "BatchedEighResult",
-    "BatchedPCAResult", "BatchedSVDResult", "BucketPolicy", "CostModel",
-    "DiskCache", "ExecutableCache", "FlushRecord", "InFlightFlush",
-    "InFlightQueue", "LRUCache", "LocalExecutor", "MeshExecutor", "OPS",
-    "PCAServer", "POLICIES", "RequestRecord", "ServedEigh", "ServedPCA",
-    "ServedSVD", "ServingPlan", "ServingStats", "SolverKey", "Ticket",
-    "TrafficProfile", "TRACE_KINDS", "aot_supported", "autotune",
+    "BatchedPCAResult", "BatchedSVDResult", "BucketPolicy", "CacheSpec",
+    "ControllerSpec", "CostModel", "DiskCache", "ExecutableCache",
+    "ExecutionSpec", "FlushRecord", "InFlightFlush", "InFlightQueue",
+    "LRUCache", "LocalExecutor", "MeshExecutor", "OPS", "ObsSpec",
+    "PCAServer", "POLICIES", "RequestRecord", "SchedulingSpec",
+    "ServedEigh", "ServedPCA", "ServedSVD", "ServerSpec",
+    "ServingController", "ServingPlan", "ServingStats", "SolverKey",
+    "SpecConflictError", "Ticket", "TrafficProfile", "TRACE_KINDS",
+    "aot_supported", "autotune", "bandit_search", "build_server",
     "build_solver_fn", "content_hash", "environment_fingerprint",
     "host_mesh", "jacobi_eigh_batched", "jacobi_svd_batched",
     "mesh_executor", "pad_to_bucket", "padding_waste", "pca_fit_batched",
     "pca_transform_batched", "percentile", "plan_grid", "replay",
-    "server_for_plan", "solve_work", "stack_requests", "synthetic_trace",
-    "threshold_router", "trace_dims",
+    "resolve_spec", "server_for_plan", "solve_work", "stack_requests",
+    "subsample", "synthetic_trace", "threshold_router", "trace_dims",
+    "validate_args",
 ]

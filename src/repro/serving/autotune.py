@@ -69,6 +69,16 @@ def solve_work(op: str, bucket: Sequence[int]) -> float:
     return m * n * n + n * n * n
 
 
+def _parse_bucket(label: str) -> Optional[Tuple[int, ...]]:
+    """Invert ``repro.obs.metrics.fmt_label`` for bucket labels:
+    ``"24x16" -> (24, 16)``.  Non-shape labels return None."""
+    try:
+        dims = tuple(int(d) for d in str(label).split("x"))
+    except ValueError:
+        return None
+    return dims if dims and all(d > 0 for d in dims) else None
+
+
 # ---------------------------------------------------------------------------
 # the plan
 # ---------------------------------------------------------------------------
@@ -79,9 +89,13 @@ class ServingPlan:
 
     ``mesh`` is the executor choice in ``sharded.mesh_executor`` spelling:
     ``"none"`` (single device), ``"auto"`` (every visible device) or an
-    integer-string N.  The default instance is exactly the
-    ``launch.serve_pca`` CLI's defaults -- the hand-picked tuple the
-    autotuner exists to beat.
+    integer-string N.  ``backend`` is the kernel-backend axis: the
+    sentinel ``"keep"`` (default) leaves the server's ``config.backend``
+    untouched -- every pre-existing plan JSON round-trips to it -- while
+    any other value (a registry backend name, or ``None`` for plain XLA)
+    overrides the config when the plan is applied or a server is built
+    for it.  The default instance is exactly the ``launch.serve_pca``
+    CLI's defaults -- the hand-picked tuple the autotuner exists to beat.
     """
     mode: str = "tile"
     T: int = 16
@@ -89,6 +103,7 @@ class ServingPlan:
     max_batch: int = 4
     max_inflight: int = 1
     mesh: str = "none"
+    backend: Optional[str] = "keep"
 
     def policy(self) -> BucketPolicy:
         return BucketPolicy(T=self.T, mode=self.mode,
@@ -109,8 +124,9 @@ class ServingPlan:
 
     def describe(self) -> str:
         cap = f"<=cap{self.pow2_cap}" if self.pow2_cap else ""
+        be = "" if self.backend == "keep" else f" backend={self.backend}"
         return (f"{self.mode}{cap}(T={self.T}) S={self.max_batch} "
-                f"inflight={self.max_inflight} mesh={self.mesh}")
+                f"inflight={self.max_inflight} mesh={self.mesh}{be}")
 
     def to_json(self) -> Dict:
         return dataclasses.asdict(self)
@@ -126,11 +142,17 @@ def plan_grid(modes: Sequence[str] = POLICIES,
               pow2_caps: Sequence[Optional[int]] = (None,),
               batches: Sequence[int] = (4, 8, 16, 32),
               inflights: Sequence[int] = (1, 2, 4),
-              meshes: Sequence[str] = ("none",)) -> List[ServingPlan]:
+              meshes: Sequence[str] = ("none",),
+              backends: Sequence[Optional[str]] = ("keep",)
+              ) -> List[ServingPlan]:
     """The small discrete search grid (exhaustive scoring is cheap).
 
     pow2 caps that are not a multiple of a tile size are skipped for that
     tile rather than raising, so one cap list can serve mixed tile lists.
+    ``meshes`` and ``backends`` default to single-element axes (the
+    grid stays scheduling-only unless a caller -- the serving controller
+    -- grows them); the analytic cost model cannot separate backends, so
+    a widened backend axis only pays off under measured bandit rungs.
     """
     plans = []
     for mode in modes:
@@ -142,9 +164,11 @@ def plan_grid(modes: Sequence[str] = POLICIES,
                 for S in batches:
                     for depth in inflights:
                         for mesh in meshes:
-                            plans.append(ServingPlan(
-                                mode=mode, T=T, pow2_cap=cap, max_batch=S,
-                                max_inflight=depth, mesh=mesh))
+                            for backend in backends:
+                                plans.append(ServingPlan(
+                                    mode=mode, T=T, pow2_cap=cap,
+                                    max_batch=S, max_inflight=depth,
+                                    mesh=mesh, backend=backend))
     return plans
 
 
@@ -210,6 +234,69 @@ class TrafficProfile:
                 f.padded_batch * solve_work(f.op, f.bucket)
                 for f in fr if f.bucket)),
             overlap_frac=(overlap_s / inflight_s if inflight_s > 0 else 0.0),
+            captured=tuple(sorted((captured or {}).items())),
+        )
+
+    @classmethod
+    def from_registry(cls, registry, window_s: float,
+                      now: Optional[float] = None,
+                      carry: Optional["TrafficProfile"] = None,
+                      decay: float = 0.5,
+                      captured: Optional[Dict] = None) -> "TrafficProfile":
+        """A sliding-window profile from live ``repro.obs.MetricRegistry``
+        telemetry (the controller's re-profiling substrate).
+
+        Reads the per-request ``serve_request_latency_seconds`` events of
+        the trailing ``window_s`` via ``registry.series_events`` -- one
+        event per fulfilled request, labeled (op, bucket) -- so the shape
+        histogram is bucket-granular (the registry does not retain
+        pre-bucketing shapes; ``from_stats`` does, and the controller
+        prefers it when the server's ``ServingStats`` is reachable).
+
+        Carry-forward: a windowed snapshot drops every op that saw zero
+        events in the window, and a profile that went empty would make a
+        controller swap to a degenerate plan tuned for nothing.  When
+        ``carry`` (the previous window's profile) is given, ops absent
+        from this window inherit their last non-empty histogram at
+        ``decay`` weight; because the controller hands each emitted
+        profile back as the next tick's ``carry``, a quiet op fades out
+        geometrically (counts round to zero after ~log2(n) quiet windows)
+        instead of vanishing the instant its traffic pauses.
+        """
+        if window_s <= 0:
+            raise ValueError(f"window_s must be > 0, got {window_s}")
+        now = registry.clock() if now is None else now
+        counts: Dict[Tuple[str, Tuple[int, ...]], int] = \
+            collections.Counter()
+        for labels, events in registry.series_events(
+                "serve_request_latency_seconds", window_s, now):
+            if not events:
+                continue
+            bucket = _parse_bucket(labels.get("bucket", ""))
+            if bucket is None:
+                continue
+            counts[(labels.get("op", "eigh"), bucket)] += len(events)
+        fresh_ops = {op for op, _ in counts}
+        if carry is not None and decay > 0:
+            for op, shape, n in carry.shape_counts:
+                if op in fresh_ops:
+                    continue
+                kept = int(round(n * decay))
+                if kept > 0:
+                    counts[(op, tuple(int(d) for d in shape))] += kept
+        shape_counts = tuple(sorted(
+            (op, shape, n) for (op, shape), n in counts.items()))
+        requests = sum(n for _, _, n in shape_counts)
+        batch_events = [v for labels, events in registry.series_events(
+            "serve_flush_batch_size", window_s, now) for _, v in events]
+        return cls(
+            shape_counts=shape_counts,
+            requests=requests,
+            duration_s=float(window_s),
+            arrival_rate=requests / window_s,
+            flushes=len(batch_events),
+            mean_flush_batch=(float(np.mean(batch_events))
+                              if batch_events else 0.0),
             captured=tuple(sorted((captured or {}).items())),
         )
 
@@ -467,13 +554,17 @@ class CostModel:
 def server_for_plan(plan: ServingPlan, config: Optional[PCAConfig] = None,
                     **kw) -> "PCAServer":
     """A fresh ``PCAServer`` configured exactly as the plan prescribes."""
-    from .engine import PCAServer
+    from . import engine
     cfg = dataclasses.replace(config or PCAConfig(),
                               T=plan.T, S=plan.max_batch)
+    if getattr(plan, "backend", "keep") != "keep":
+        cfg = dataclasses.replace(cfg, backend=plan.backend)
     kw.setdefault("max_delay_s", 10.0)
-    return PCAServer(cfg, policy=plan.policy(), max_batch=plan.max_batch,
-                     max_inflight=plan.max_inflight,
-                     executor=plan.build_executor(), **kw)
+    with engine.spec_construction():
+        return engine.PCAServer(
+            cfg, policy=plan.policy(), max_batch=plan.max_batch,
+            max_inflight=plan.max_inflight,
+            executor=plan.build_executor(), **kw)
 
 
 def replay(profile: TrafficProfile, plan: ServingPlan,
@@ -524,16 +615,20 @@ def replay(profile: TrafficProfile, plan: ServingPlan,
 @dataclasses.dataclass
 class AutotuneResult:
     best: ServingPlan
-    mode: str                                   # "analytic" | "measured"
+    mode: str            # "analytic" | "measured" | "bandit[-analytic]"
     scored: List[Tuple[ServingPlan, Dict]]      # every plan, best first
     measured: List[Dict] = dataclasses.field(default_factory=list)
     model: Optional[CostModel] = None
+    measured_evals: int = 0                     # replay calls spent
+    grid_size: int = 0
 
     def to_json(self) -> Dict:
         return {
             "mode": self.mode,
             "best": self.best.to_json(),
             "best_describe": self.best.describe(),
+            "grid_size": self.grid_size,
+            "measured_evals": self.measured_evals,
             "analytic_top": [
                 {"plan": p.to_json(), "total_s": c["total_s"],
                  "est_requests_per_s": c["est_requests_per_s"],
@@ -588,4 +683,132 @@ def autotune(profile: TrafficProfile,
             "autotune_searches_total", "Serving-plan autotune searches.",
             ("mode",)).labels(mode=mode).inc()
     return AutotuneResult(best=best, mode=mode, scored=scored,
-                          measured=measured, model=model)
+                          measured=measured, model=model,
+                          measured_evals=len(measured), grid_size=len(grid))
+
+
+# ---------------------------------------------------------------------------
+# successive-halving bandit search
+# ---------------------------------------------------------------------------
+
+def subsample(profile: TrafficProfile, frac: float,
+              seed: int = 0) -> TrafficProfile:
+    """The profile at reduced fidelity: every histogram count scaled by
+    ``frac`` (at least 1, so no op disappears -- a rung must still see
+    every traffic mode it is ranking plans for).  Low rungs of the bandit
+    replay these cheap approximations; only the final rung pays for the
+    full profile."""
+    if frac >= 1.0:
+        return profile
+    if frac <= 0:
+        raise ValueError(f"frac must be in (0, 1], got {frac}")
+    rows = tuple(sorted((op, shape, max(1, int(round(n * frac))))
+                        for op, shape, n in profile.shape_counts))
+    requests = sum(n for _, _, n in rows)
+    return dataclasses.replace(
+        profile, shape_counts=rows, requests=requests,
+        duration_s=profile.duration_s * frac)
+
+
+def _rung_sizes(budget: int, n_plans: int, eta: int) -> List[int]:
+    """Survivor counts per rung: geometric decay by ``eta`` down to a
+    final rung of 1, sized so the total replay calls fit ``budget``."""
+    n0 = min(n_plans, max(2, (budget * (eta - 1)) // eta))
+    while n0 > 1:
+        sizes = []
+        n = n0
+        while n > 1:
+            sizes.append(n)
+            n = max(1, math.ceil(n / eta))
+        sizes.append(1)
+        if sum(sizes) <= budget:
+            return sizes
+        n0 -= 1
+    return [1] if budget >= 1 else []
+
+
+def bandit_search(profile: TrafficProfile,
+                  grid: Optional[Sequence[ServingPlan]] = None,
+                  model: Optional[CostModel] = None,
+                  budget_frac: float = 0.25,
+                  eta: int = 3,
+                  config: Optional[PCAConfig] = None,
+                  seed: int = 0,
+                  passes: int = 1,
+                  measure: bool = True,
+                  obs=None) -> AutotuneResult:
+    """Successive-halving plan search: analytic seeding, measured rungs.
+
+    The exhaustive ``autotune(measure_top_k=len(grid))`` spends one
+    ``replay`` per plan; this spends at most ``budget_frac`` of that
+    (default 25% -- i.e. >= 75% of the measured evaluations are pruned),
+    which is what lets the grid grow the mesh x backend axes without the
+    measured refinement exploding:
+
+      rung 0   the analytic ``CostModel`` scores the *whole* grid for
+               free and seeds the first measured rung with its top
+               ``n0`` arms (``n0`` sized so the geometric rung series
+               fits the replay budget).
+      rung i   every surviving arm replays a ``subsample`` of the
+               profile whose fidelity grows by ``eta`` per rung (classic
+               successive halving on fidelity); the top ``1/eta`` of
+               arms by measured throughput survive.  Ties break toward
+               the better analytic rank, so fidelity noise can only
+               reorder plans the model already called close.
+      final    the last survivor pair replays the full profile; the
+               measured winner is the plan.
+
+    ``measure=False`` (or a budget below 2 replays) degrades to pure
+    analytic ranking over the grid -- deterministic under an injected
+    clock, which is how the serving controller runs in tests and under
+    ``VirtualClock`` traffic.
+    """
+    grid = list(grid) if grid is not None else plan_grid()
+    if not grid:
+        raise ValueError("empty plan grid")
+    if eta < 2:
+        raise ValueError(f"eta must be >= 2, got {eta}")
+    t0 = obs.clock() if obs is not None else 0.0
+    model = model or CostModel.calibrated(profile)
+    scored = sorted(((plan, model.plan_cost(plan, profile))
+                     for plan in grid), key=lambda pc: pc[1]["total_s"])
+    budget = int(budget_frac * len(grid))
+    measured: List[Dict] = []
+    evals = 0
+    if not measure or budget < 2:
+        best, mode = scored[0][0], "bandit-analytic"
+    else:
+        sizes = _rung_sizes(budget, len(grid), eta)
+        analytic_rank = {plan: i for i, (plan, _) in enumerate(scored)}
+        survivors = [plan for plan, _ in scored[:sizes[0]]]
+        n_rungs = len(sizes)
+        for i, size in enumerate(sizes):
+            survivors = survivors[:size]
+            frac = float(eta) ** (i - (n_rungs - 1))
+            rung_profile = subsample(profile, frac, seed=seed)
+            rows = []
+            for plan in survivors:
+                row = replay(rung_profile, plan, config=config, seed=seed,
+                             passes=passes)
+                evals += 1
+                row.update(plan=plan.to_json(), describe=plan.describe(),
+                           rung=i, fidelity=frac,
+                           est_total_s=model.plan_cost(
+                               plan, profile)["total_s"])
+                rows.append((plan, row))
+            rows.sort(key=lambda pr: (-pr[1]["requests_per_s"],
+                                      analytic_rank[pr[0]]))
+            measured.extend(r for _, r in rows)
+            survivors = [plan for plan, _ in rows]
+        best, mode = survivors[0], "bandit"
+    if obs is not None:
+        obs.tracer.complete(
+            "autotune", ts=t0, end=obs.clock(), cat="control",
+            track="control", mode=mode, plans=len(grid),
+            measured=evals, best=best.describe())
+        obs.metrics.counter(
+            "autotune_searches_total", "Serving-plan autotune searches.",
+            ("mode",)).labels(mode=mode).inc()
+    return AutotuneResult(best=best, mode=mode, scored=scored,
+                          measured=measured, model=model,
+                          measured_evals=evals, grid_size=len(grid))

@@ -36,9 +36,11 @@ the solver, and launch it -- queueing/bucketing/deadlines never see devices.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import itertools
 import time
+import warnings
 from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
@@ -51,6 +53,31 @@ from .sharded import LocalExecutor
 from .stats import RequestRecord, ServingStats
 
 OPS = ("eigh", "svd", "pca")
+
+# sentinel distinguishing "caller passed this kwarg" from the default --
+# the deprecation shim below counts explicit spec-covered kwargs
+_UNSET = object()
+
+# how many spec-covered kwargs a direct PCAServer(...) call may pass
+# before the construction is spec-shaped enough that the shim asks for a
+# ServerSpec instead (1-2 kwargs is a tweak; 3+ is a configuration)
+SPEC_SHIM_THRESHOLD = 3
+
+_spec_depth = 0  # >0 while spec.build_server / server_for_plan constructs
+
+
+@contextlib.contextmanager
+def spec_construction():
+    """Suppress the multi-kwarg ``DeprecationWarning`` for construction
+    paths that already went through the spec layer (``PCAServer.from_spec``
+    builds with many kwargs internally -- that is the blessed path, not
+    the deprecated one)."""
+    global _spec_depth
+    _spec_depth += 1
+    try:
+        yield
+    finally:
+        _spec_depth -= 1
 
 # a backend router maps (op, bucket_shape) -> kernel backend name for that
 # bucket's executable (None = plain XLA matmul datapath); see
@@ -273,18 +300,48 @@ class PCAServer:
     def __init__(
         self,
         config: PCAConfig = PCAConfig(),
-        policy: Optional[BucketPolicy] = None,
-        max_batch: Optional[int] = None,
-        max_delay_s: float = 0.01,
-        pad_batches: bool = True,
-        backend_router: Optional[BackendRouter] = None,
-        executor: Optional[LocalExecutor] = None,
-        max_inflight: int = 1,
-        obs=None,
-        cache_dir=None,
-        max_cached_executables: Optional[int] = DEFAULT_MAX_ENTRIES,
+        policy: Optional[BucketPolicy] = _UNSET,
+        max_batch: Optional[int] = _UNSET,
+        max_delay_s: float = _UNSET,
+        pad_batches: bool = _UNSET,
+        backend_router: Optional[BackendRouter] = _UNSET,
+        executor: Optional[LocalExecutor] = _UNSET,
+        max_inflight: int = _UNSET,
+        obs=_UNSET,
+        cache_dir=_UNSET,
+        max_cached_executables: Optional[int] = _UNSET,
         clock: Callable[[], float] = time.monotonic,
     ):
+        # compatibility shim: this 13-kwarg signature predates
+        # serving.spec.ServerSpec.  Each spec-covered kwarg defaults to a
+        # sentinel so explicitly-passed kwargs are countable; passing
+        # SPEC_SHIM_THRESHOLD or more of them outside the spec layer is a
+        # spec-shaped construction and earns a DeprecationWarning pointing
+        # at PCAServer.from_spec.
+        explicit = sum(
+            v is not _UNSET
+            for v in (policy, max_batch, max_delay_s, pad_batches,
+                      backend_router, executor, max_inflight, obs,
+                      cache_dir, max_cached_executables))
+        if explicit >= SPEC_SHIM_THRESHOLD and not _spec_depth:
+            warnings.warn(
+                f"PCAServer(...) with {explicit} construction kwargs is "
+                "deprecated: build a serving.spec.ServerSpec and call "
+                "PCAServer.from_spec(spec) (or spec.build_server(spec))",
+                DeprecationWarning, stacklevel=2)
+        policy = None if policy is _UNSET else policy
+        max_batch = None if max_batch is _UNSET else max_batch
+        max_delay_s = 0.01 if max_delay_s is _UNSET else max_delay_s
+        pad_batches = True if pad_batches is _UNSET else pad_batches
+        backend_router = (None if backend_router is _UNSET
+                          else backend_router)
+        executor = None if executor is _UNSET else executor
+        max_inflight = 1 if max_inflight is _UNSET else max_inflight
+        obs = None if obs is _UNSET else obs
+        cache_dir = None if cache_dir is _UNSET else cache_dir
+        max_cached_executables = (DEFAULT_MAX_ENTRIES
+                                  if max_cached_executables is _UNSET
+                                  else max_cached_executables)
         if max_inflight < 1:
             raise ValueError(f"max_inflight must be >= 1, got {max_inflight}")
         self.config = config
@@ -305,8 +362,25 @@ class PCAServer:
         self._rid = itertools.count()
         self._seq = itertools.count()
         self._exec_label = self.executor.describe()
+        # optional serving.controller.ServingController; poll() ticks it
+        # so the re-profile/search/swap loop rides the engine's own clock
+        self.controller = None
+        # declarative construction record when built via from_spec/
+        # build_server (None for direct kwarg construction)
+        self.spec = None
         if obs is not None:
             self._wire_obs()
+
+    @classmethod
+    def from_spec(cls, spec, clock: Optional[Callable[[], float]] = None,
+                  frontend=None) -> "PCAServer":
+        """Build a server (plus obs bundle and controller, when the spec
+        asks for them) from a declarative ``serving.spec.ServerSpec`` --
+        the blessed construction path the 13-kwarg ``__init__`` shims.
+        ``clock`` injects a shared clock (tests pass a ``VirtualClock``);
+        ``frontend`` wires the controller's admission feedback."""
+        from .spec import build_server
+        return build_server(spec, clock=clock, frontend=frontend)
 
     def _wire_obs(self) -> None:
         """Create the engine's metric families once (per-call recording is
@@ -407,8 +481,15 @@ class PCAServer:
         Queues are visited in sorted (op, bucket) order, so dispatch --
         and therefore retirement and telemetry -- order is reproducible
         under the injected clock no matter the submission interleaving.
+
+        When a ``serving.controller.ServingController`` is attached, poll
+        also ticks it (before dispatch, so a plan swap this tick decides
+        on lands ahead of the flushes it re-buckets); the controller's
+        own cadence guard makes the tick a no-op between re-profiles.
         """
         now = self.clock() if now is None else now
+        if self.controller is not None:
+            self.controller.maybe_tick(now)
         done = self._inflight.retire_ready()
         for key in sorted(k for k, q in self._queues.items()
                           if q and min(e.flush_by for e in q) <= now):
@@ -508,6 +589,10 @@ class PCAServer:
         # re-bucketed onto them
         new_config = dataclasses.replace(self.config, T=new_policy.T,
                                          S=plan.max_batch)
+        plan_backend = getattr(plan, "backend", "keep")
+        if plan_backend != "keep":
+            new_config = dataclasses.replace(new_config,
+                                             backend=plan_backend)
         warm_shapes = sorted({(e.ticket.op, e.matrix.shape)
                               for q in self._queues.values() for e in q})
         if warm_profile is not None:
@@ -527,8 +612,7 @@ class PCAServer:
         self.max_batch = plan.max_batch
         self.max_inflight = plan.max_inflight
         self.executor = new_executor
-        self.config = dataclasses.replace(self.config, T=self.policy.T,
-                                          S=self.max_batch)
+        self.config = new_config
         self._exec_label = self.executor.describe()
         switch = {"from": old_plan, "to": self.describe_plan(),
                   "requeued": len(queued), "prewarmed": prewarmed}

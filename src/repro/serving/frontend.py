@@ -507,6 +507,17 @@ class TrafficFrontend:
         self.degrade_sweeps = max(
             1, int(round(server.config.sweeps * degrade_frac)))
 
+    def set_cost_model(self, model: CostModel) -> None:
+        """Swap the admission cost model in place -- the controller's
+        feedback path.  After a plan hot-swap the server's policy and
+        batch cap may have moved too, so admission re-reads both: a
+        feasibility verdict should price the plan actually in force, not
+        the one the frontend was built against."""
+        self.model = model
+        self.admission.model = model
+        self.admission.policy = self.server.policy
+        self.admission.batch = self.server.max_batch
+
     # -- shared admission math ----------------------------------------------
     def _slo_for(self, tenant: str) -> Optional[float]:
         spec = self.tenants[tenant]
@@ -533,6 +544,12 @@ class TrafficFrontend:
         entry (arrival, matrix, sweeps, t_ingress) or None when the
         request was throttled/shed.  Outcome accounting for the rejected
         paths happens here; served/degraded land at completion."""
+        controller = getattr(self.server, "controller", None)
+        if controller is not None:
+            # the virtual-time run never calls server.poll(), so the
+            # arrival stream is the controller's clock source there; the
+            # paced run double-ticks harmlessly (cadence-guarded no-op)
+            controller.maybe_tick(now)
         spec = self.tenants[a.tenant]
         if not self.buckets[a.tenant].try_take(now):
             self._outcome(a, "throttled", now)

@@ -435,3 +435,72 @@ def test_achieved_flops_gates_higher_is_better():
                                 gflops=20.0)])
     lines, ok = check_bench.compare_docs("r.json", base, fresh, tol=0.25)
     assert not ok and any("REGRESSION" in ln for ln in lines)
+
+
+# ---------------------------------------------------------------------------
+# the intra-file controller gate (BENCH_controller_regret.json)
+# ---------------------------------------------------------------------------
+
+def _controller_doc(regret, swaps, measured=18, grid=72, budget=0.25):
+    return _doc([
+        {"suite": "regret", "scenario": "regime_shift",
+         "regret_frac": regret, "swaps": swaps, "requests_per_s": 100.0},
+        {"suite": "prune", "scenario": "bimodal",
+         "measured_evals": measured, "grid_size": grid,
+         "budget_frac": budget, "measured_frac": measured / grid},
+    ])
+
+
+def test_controller_gate_healthy_rows_pass():
+    doc = _controller_doc(regret=0.01, swaps=3)
+    lines, ok = check_bench.controller_gate("k.json", doc, tol=0.25)
+    assert ok
+    assert any("regret[regime_shift]" in ln for ln in lines)
+    assert any("prune[bimodal]" in ln for ln in lines)
+
+
+def test_controller_gate_high_regret_fails():
+    """Ceiling is 0.10 with multiplicative slack: 0.125 at tol 0.25."""
+    doc = _controller_doc(regret=0.12, swaps=2)
+    lines, ok = check_bench.controller_gate("k.json", doc, tol=0.25)
+    assert ok                               # inside the slack band
+    doc = _controller_doc(regret=0.13, swaps=2)
+    lines, ok = check_bench.controller_gate("k.json", doc, tol=0.25)
+    assert not ok and any("HIGH-REGRET" in ln for ln in lines)
+
+
+def test_controller_gate_thrashing_fails_without_slack():
+    doc = _controller_doc(regret=0.01, swaps=4)
+    lines, ok = check_bench.controller_gate("k.json", doc, tol=0.25)
+    assert not ok and any("THRASHING" in ln for ln in lines)
+
+
+def test_controller_gate_unpruned_search_fails_without_slack():
+    doc = _controller_doc(regret=0.01, swaps=2, measured=19)
+    lines, ok = check_bench.controller_gate("k.json", doc, tol=0.25)
+    assert not ok and any("NO-PRUNING" in ln for ln in lines)
+    # exactly at the budget cap passes
+    doc = _controller_doc(regret=0.01, swaps=2, measured=18)
+    lines, ok = check_bench.controller_gate("k.json", doc, tol=0.25)
+    assert ok
+
+
+def test_controller_gate_without_rows_skips():
+    lines, ok = check_bench.controller_gate("k.json", _doc([]), tol=0.25)
+    assert ok and any("skipped" in ln for ln in lines)
+
+
+def test_regret_frac_gates_lower_is_better():
+    """regret_frac is a first-class lower-is-better metric for the
+    row-vs-HEAD diff: a fresh copy with triple the regret regresses even
+    when it still clears the intra-file ceiling."""
+    base = _doc([{"suite": "regret", "scenario": "regime_shift",
+                  "regret_frac": 0.01}])
+    fresh = _doc([{"suite": "regret", "scenario": "regime_shift",
+                   "regret_frac": 0.03}])
+    lines, ok = check_bench.compare_docs("k.json", base, fresh, tol=0.25)
+    assert not ok and any("REGRESSION" in ln for ln in lines)
+    better = _doc([{"suite": "regret", "scenario": "regime_shift",
+                    "regret_frac": 0.005}])
+    lines, ok = check_bench.compare_docs("k.json", base, better, tol=0.25)
+    assert ok
